@@ -1,0 +1,119 @@
+"""Pallas kernel micro-bench: shape sweeps vs ref oracles (interpret mode).
+
+Interpret-mode wall-clock is NOT TPU performance — correctness + the chosen
+block shapes are the report here; kernel perf on hardware is governed by the
+BlockSpec tiling documented per kernel (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_update.ops import block_wy_update
+from repro.kernels.block_update.ref import wy_update_ref
+from repro.kernels.flash_attention.ops import mha_flash
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.frob_truncate.ops import delta_truncate
+from repro.kernels.frob_truncate.ref import frob_truncate_ref
+from repro.kernels.householder.ops import panel_factor, build_t
+from repro.kernels.householder.ref import panel_factor_ref
+from repro.kernels.singular_sort.ops import sort_singular_values
+from repro.kernels.singular_sort.ref import sort_desc_ref
+
+
+def _maxerr(a, b) -> float:
+    return float(jnp.max(jnp.abs(a - b)))
+
+
+def run(verbose: bool = True) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # WY trailing update — the TTD-Engine GEMM-reuse analogue
+    for (m, n, b) in [(256, 192, 32), (384, 256, 64)]:
+        a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        vs, taus, _ = panel_factor_ref(
+            jnp.asarray(rng.standard_normal((m, b)), jnp.float32))
+        t = build_t(vs, taus)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(block_wy_update(a, vs, t, interpret=True))
+        dt = time.perf_counter() - t0
+        err = _maxerr(out, wy_update_ref(a, vs, t))
+        rows.append({"kernel": "block_update", "shape": f"{m}x{n}b{b}",
+                     "max_err": err, "wall_s": dt})
+
+    # Householder panel factorization
+    for (m, b) in [(256, 32), (512, 64)]:
+        ap = jnp.asarray(rng.standard_normal((m, b)), jnp.float32)
+        t0 = time.perf_counter()
+        vs, taus, r_ = jax.block_until_ready(panel_factor(ap, interpret=True))
+        dt = time.perf_counter() - t0
+        vr, tr, rr_ = panel_factor_ref(ap)
+        err = max(_maxerr(vs, vr), _maxerr(taus, tr), _maxerr(r_, rr_))
+        rows.append({"kernel": "householder_panel", "shape": f"{m}x{b}",
+                     "max_err": err, "wall_s": dt})
+
+    # bitonic singular-value sort
+    for n in (128, 500):
+        s = jnp.asarray(np.abs(rng.standard_normal(n)), jnp.float32)
+        t0 = time.perf_counter()
+        ss, ind = jax.block_until_ready(
+            sort_singular_values(s, interpret=True))
+        dt = time.perf_counter() - t0
+        sr, ir = sort_desc_ref(s)
+        err = _maxerr(ss, sr)
+        rows.append({"kernel": "singular_sort", "shape": f"{n}",
+                     "max_err": err, "wall_s": dt})
+
+    # δ-truncation reverse-Frobenius scan
+    for n in (128, 512):
+        s = jnp.sort(jnp.asarray(
+            np.abs(rng.standard_normal(n)), jnp.float32))[::-1]
+        delta = float(0.3 * np.linalg.norm(np.asarray(s)))
+        t0 = time.perf_counter()
+        tail, rank = jax.block_until_ready(
+            delta_truncate(s, delta, interpret=True))
+        dt = time.perf_counter() - t0
+        tail_r, rank_r = frob_truncate_ref(s, delta)
+        err = max(_maxerr(tail, tail_r), float(jnp.abs(rank - rank_r)))
+        rows.append({"kernel": "frob_truncate", "shape": f"{n}",
+                     "max_err": err, "wall_s": dt})
+
+    # flash attention (GQA + causal)
+    b_, s_, hq, hkv, d = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((b_, s_, hq, d)), jnp.float32) * 0.1
+    k = jnp.asarray(rng.standard_normal((b_, s_, hkv, d)), jnp.float32) * 0.1
+    v = jnp.asarray(rng.standard_normal((b_, s_, hkv, d)), jnp.float32) * 0.1
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(mha_flash(q, k, v, causal=True,
+                                          interpret=True))
+    dt = time.perf_counter() - t0
+    kx = jnp.repeat(k, hq // hkv, axis=2)
+    vx = jnp.repeat(v, hq // hkv, axis=2)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(b_ * hq, s_, d),
+        kx.transpose(0, 2, 1, 3).reshape(b_ * hq, s_, d),
+        vx.transpose(0, 2, 1, 3).reshape(b_ * hq, s_, d),
+        causal=True,
+    ).reshape(b_, hq, s_, d).transpose(0, 2, 1, 3)
+    err = _maxerr(out, ref)
+    rows.append({"kernel": "flash_attention", "shape": f"s{s_}h{hq}/{hkv}",
+                 "max_err": err, "wall_s": dt})
+
+    if verbose:
+        print("kernel,shape,max_abs_err,interpret_wall_s")
+        for r in rows:
+            print(f"{r['kernel']},{r['shape']},{r['max_err']:.2e},"
+                  f"{r['wall_s']:.2f}")
+        bad = [r for r in rows if r["max_err"] > 5e-3]
+        print(f"# {len(rows)} kernel cells, {len(bad)} above tolerance")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

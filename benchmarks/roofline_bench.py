@@ -1,0 +1,77 @@
+"""§Roofline table — render the dry-run artifacts as the per-cell report.
+
+Reads ``results/dryrun_single_pod.json`` (+ optional multi-pod / hillclimb
+files) and prints, per (arch × shape): the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and the
+roofline fraction (compute_s / max-term).  This file does NOT lower
+anything itself — run ``python -m repro.launch.dryrun --all`` first.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(multi_pod: bool = False) -> List[Dict]:
+    name = "dryrun_multi_pod.json" if multi_pod else "dryrun_single_pod.json"
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(rows: List[Dict], verbose: bool = True) -> List[Dict]:
+    out = []
+    for e in rows:
+        if e.get("skipped"):
+            out.append({"arch": e["arch"], "shape": e["shape"],
+                        "status": "SKIP"})
+            continue
+        if "error" in e:
+            out.append({"arch": e["arch"], "shape": e["shape"],
+                        "status": "FAIL"})
+            continue
+        r = e["roofline"]
+        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append({
+            "arch": e["arch"], "shape": e["shape"], "status": "OK",
+            "compute_ms": r["compute_s"] * 1e3,
+            "memory_ms": r["memory_s"] * 1e3,
+            "collective_ms": r["collective_s"] * 1e3,
+            "bottleneck": r["bottleneck"],
+            "roofline_frac": r["compute_s"] / step if step else 0.0,
+            "useful_ratio": e.get("useful_flops_ratio") or 0.0,
+            "hbm_fit": e["memory"]["peak_ok"],
+        })
+    if verbose:
+        print("arch,shape,compute_ms,memory_ms,collective_ms,bottleneck,"
+              "roofline_frac,useful_flops_ratio,fits_hbm")
+        for o in out:
+            if o["status"] != "OK":
+                print(f"{o['arch']},{o['shape']},{o['status']},,,,,,")
+                continue
+            print(f"{o['arch']},{o['shape']},{o['compute_ms']:.1f},"
+                  f"{o['memory_ms']:.1f},{o['collective_ms']:.1f},"
+                  f"{o['bottleneck']},{o['roofline_frac']:.3f},"
+                  f"{o['useful_ratio']:.3f},{o['hbm_fit']}")
+    return out
+
+
+def run(verbose: bool = True) -> Dict:
+    single = render(load(multi_pod=False), verbose=verbose)
+    ok = [o for o in single if o["status"] == "OK"]
+    if verbose and ok:
+        worst = sorted(ok, key=lambda o: o["roofline_frac"])[:3]
+        print("# worst roofline fractions:",
+              "; ".join(f"{o['arch']}×{o['shape']}={o['roofline_frac']:.3f}"
+                        for o in worst))
+    return {"single_pod": single}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,table3,comm,roofline]
+
+  table1    Paper Table I   — TD-method comparison on ResNet-32 params
+  table3    Paper Table III — TTD phase breakdown, baseline vs TT-Edge
+  comm      Paper Fig. 1    — cross-pod TT-compressed sync payload
+  roofline  §Roofline       — per-cell roofline table from the dry-run
+  kernels   Pallas kernel block-shape sweeps vs ref oracles (quick)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def bench_table1():
+    from benchmarks import table1_compression
+    table1_compression.run()
+
+
+def bench_table3():
+    from benchmarks import table3_phases
+    table3_phases.run()
+
+
+def bench_comm():
+    from benchmarks import table_comm
+    table_comm.run()
+
+
+def bench_roofline():
+    from benchmarks import roofline_bench
+    roofline_bench.run()
+
+
+def bench_kernels():
+    from benchmarks import kernel_bench
+    kernel_bench.run()
+
+
+ALL = {
+    "table1": bench_table1,
+    "table3": bench_table3,
+    "comm": bench_comm,
+    "roofline": bench_roofline,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(ALL)
+
+    failures = []
+    for name in names:
+        print(f"\n{'=' * 72}\n== benchmark: {name}\n{'=' * 72}", flush=True)
+        t0 = time.time()
+        try:
+            ALL[name]()
+            print(f"== {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

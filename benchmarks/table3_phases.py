@@ -1,0 +1,156 @@
+"""Paper Table III — TTD phase time breakdown, baseline vs TT-Edge analogue.
+
+The paper instruments TTD of ResNet-32 into five phases and compares the
+GEMM-only baseline processor against TT-Edge:
+
+  phase              baseline(ms)  tt-edge(ms)  speedup
+  HBD                5626.42       2743.80      2.05×
+  QR Decomp.         1554.66       1554.66      1.00×   (unaccelerated)
+  Sort. & Trunc.     312.56        31.37        9.96×
+  Update SVD In.     46.65         46.65        1.00×
+  Reshape & etc      189.24        189.24       1.00×
+  Total              7729.52       4566.71      1.70×
+
+Here the two "processors" are two schedules of the same arithmetic:
+  baseline  — paper-faithful Algorithm 2: unblocked HBD (one reflector at a
+              time, rank-1 updates = the 16×16-GEMM-array path);
+  tt-edge   — the TPU-native analogue of the TTD-Engine: panel/WY-blocked
+              HBD (Householder vectors resident in fast memory, trailing
+              update as large MXU-shaped GEMMs) + fused sort/truncate.
+Wall-clock is CPU (this container), so absolute times differ from the
+paper's 100 MHz FPGA; the *structure* (HBD-dominant, phase ratios) is the
+reproduction target.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocked as _blocked
+from repro.core import hbd as _hbd
+from repro.core import truncation as _trunc
+from repro.core.svd import sorting_basis
+from benchmarks.workload_resnet32 import conv_stack, resnet32_params
+
+PHASES = ("HBD", "QR Decomp.", "Sort. & Trunc.", "Update SVD In.",
+          "Reshape & etc")
+
+
+def _block(x):
+    jax.block_until_ready(x)
+    return x
+
+
+def _phase_timed_ttd(w: np.ndarray, eps: float, impl: str,
+                     times: Dict[str, float]) -> None:
+    """One TT-SVD sweep over tensor ``w`` accumulating per-phase seconds.
+
+    impl: "unblocked" (baseline) | "blocked" (tt-edge analogue).
+    """
+    t0 = time.perf_counter()
+    shape = w.shape
+    d = w.ndim
+    frob = float(np.linalg.norm(w))
+    delta = float(_trunc.delta_threshold(eps, d, frob))
+    ranks = [1]
+    w_temp = w
+    times["Reshape & etc"] += time.perf_counter() - t0
+
+    for k in range(d - 1):
+        t0 = time.perf_counter()
+        rows = ranks[-1] * shape[k]
+        mat = jnp.asarray(w_temp.reshape(rows, -1), jnp.float32)
+        transpose = mat.shape[0] < mat.shape[1]
+        a = _block(mat.T if transpose else mat)
+        times["Reshape & etc"] += time.perf_counter() - t0
+
+        # ---- phase 1: HBD -------------------------------------------------
+        t0 = time.perf_counter()
+        if impl == "blocked":
+            u_b, b, v_bt = _blocked.blocked_bidiagonalize(a, panel=32)
+        else:
+            u_b, b, v_bt = _hbd.householder_bidiagonalize(a)
+        _block(b)
+        times["HBD"] += time.perf_counter() - t0
+
+        # ---- phase 2: QR-based diagonalization (unaccelerated) ------------
+        t0 = time.perf_counter()
+        n = a.shape[1]
+        q, s, pt = jnp.linalg.svd(b[:n, :n], full_matrices=False)
+        u = u_b[:, :n] @ q
+        vt = pt @ v_bt
+        _block(vt)
+        times["QR Decomp."] += time.perf_counter() - t0
+
+        # ---- sorting + δ-truncation ---------------------------------------
+        t0 = time.perf_counter()
+        u, s, vt = sorting_basis(u, s, vt)
+        _block(s)
+        s_np = np.asarray(s)
+        r = _trunc.truncation_rank(s_np, delta)
+        times["Sort. & Trunc."] += time.perf_counter() - t0
+
+        if transpose:
+            u, vt = vt.T, u.T
+        u_np, s_np, vt_np = (np.asarray(u)[:, :r], s_np[:r],
+                             np.asarray(vt)[:r, :])
+
+        # ---- update SVD input: W_temp = Σ_t V_t^T -------------------------
+        t0 = time.perf_counter()
+        w_temp = s_np[:, None] * vt_np
+        times["Update SVD In."] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        ranks.append(r)
+        times["Reshape & etc"] += time.perf_counter() - t0
+
+
+def run(eps: float = 0.22, seed: int = 0, max_tensors: int = 12,
+        verbose: bool = True) -> Dict:
+    """Phase breakdown over the largest ResNet-32 conv stack tensors."""
+    params = resnet32_params(seed=seed)
+    stack = sorted(conv_stack(params), key=lambda kv: -kv[1].size)
+    tensors = [w for _, w in stack[:max_tensors]]
+
+    results = {}
+    for impl, label in (("unblocked", "baseline"), ("blocked", "tt-edge")):
+        # pass 1 warms every jit cache entry (TT-SVD shapes are
+        # data-deterministic, so pass 2 hits only compiled code); pass 2 is
+        # the measured execution time — the analogue of steady-state
+        # hardware throughput, not compile latency.
+        warm = {p: 0.0 for p in PHASES}
+        for w in tensors:
+            _phase_timed_ttd(w, eps, impl, warm)
+        times = {p: 0.0 for p in PHASES}
+        for w in tensors:
+            _phase_timed_ttd(w, eps, impl, times)
+        times["Total"] = sum(times[p] for p in PHASES)
+        results[label] = times
+
+    paper = {"HBD": (5626.42, 2743.80), "QR Decomp.": (1554.66, 1554.66),
+             "Sort. & Trunc.": (312.56, 31.37),
+             "Update SVD In.": (46.65, 46.65),
+             "Reshape & etc": (189.24, 189.24),
+             "Total": (7729.52, 4566.71)}
+    if verbose:
+        print(f"# Table III analogue ({len(tensors)} largest conv tensors, "
+              f"ε={eps}; CPU wall-clock)")
+        print("phase,baseline_ms,ttedge_ms,speedup,paper_speedup")
+        for p in PHASES + ("Total",):
+            b = results["baseline"][p] * 1e3
+            t = results["tt-edge"][p] * 1e3
+            pb, pt_ = paper[p]
+            print(f"{p},{b:.1f},{t:.1f},{b / max(t, 1e-9):.2f},"
+                  f"{pb / pt_:.2f}")
+        hb = results["baseline"]["HBD"] / results["baseline"]["Total"]
+        print(f"# HBD share of baseline total: {hb:.1%} (paper: 72.8%)")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""The paper's benchmark workload: ResNet-32 (CIFAR-10) parameters.
+
+The paper compresses a *trained* ResNet-32 (0.47M params, Table I).  We have
+no CIFAR-10 in this container, so we synthesize parameters with the spectral
+profile of trained convnets instead of training one: trained conv/fc weight
+matricizations exhibit power-law singular-value decay (Martin & Mahoney,
+2021 — "heavy-tailed self-regularization"), which is precisely what makes
+δ-truncated TTD effective.  Random i.i.d. Gaussian weights have a
+quarter-circle (flat) spectrum and would understate every method's ratio
+equally.  We therefore draw each weight as U diag(s) V^T with s_i ∝ i^{-α},
+α = 1.0 (mid-range of the trained-model fits), and report *reconstruction
+error* as the accuracy proxy.  This assumption is recorded in DESIGN.md.
+
+Architecture (He et al. 2016, CIFAR variant, n = 5 → 6n+2 = 32 layers):
+  conv1   3×3×3×16
+  stage1  5 blocks × 2 × (3×3×16×16)
+  stage2  3×3×16×32 + 3×3×32×32 ×9   (first block downsamples)
+  stage3  3×3×32×64 + 3×3×64×64 ×9
+  fc      64×10 (+bias)
+  per-conv BN (γ, β)
+Total ≈ 0.467M parameters — matching Table I's 0.47M.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def _spectral_weight(rng: np.random.Generator, shape: Tuple[int, ...],
+                     alpha: float = 1.0) -> np.ndarray:
+    """Weight tensor whose (out, in·kh·kw) matricization has s_i ∝ i^-alpha."""
+    mat_shape = (shape[0], int(np.prod(shape[1:])))
+    m, n = mat_shape
+    k = min(m, n)
+    # Haar-ish bases via QR of Gaussians.
+    qu, _ = np.linalg.qr(rng.standard_normal((m, k)))
+    qv, _ = np.linalg.qr(rng.standard_normal((n, k)))
+    s = (np.arange(1, k + 1, dtype=np.float64) ** (-alpha))
+    w = (qu * s) @ qv.T
+    # He-init scale, as trained nets roughly preserve init magnitude.
+    w *= np.sqrt(2.0 / np.prod(shape[1:])) / np.linalg.norm(w) * np.sqrt(w.size)
+    return w.reshape(shape).astype(np.float32)
+
+
+def resnet32_params(seed: int = 0, alpha: float = 1.0) -> Dict[str, np.ndarray]:
+    """Parameter pytree (name → array), conv kernels as (C_out, C_in, kh, kw)."""
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+
+    def conv(name: str, c_out: int, c_in: int):
+        params[f"{name}.w"] = _spectral_weight(rng, (c_out, c_in, 3, 3), alpha)
+        params[f"{name}.bn.g"] = np.ones((c_out,), np.float32)
+        params[f"{name}.bn.b"] = np.zeros((c_out,), np.float32)
+
+    conv("conv1", 16, 3)
+    widths = [16, 32, 64]
+    for s, w in enumerate(widths):
+        w_in = 16 if s == 0 else widths[s - 1]
+        for b in range(5):
+            cin = w_in if b == 0 else w
+            conv(f"s{s}.b{b}.conv1", w, cin)
+            conv(f"s{s}.b{b}.conv2", w, w)
+    params["fc.w"] = _spectral_weight(rng, (10, 64), alpha)
+    params["fc.b"] = np.zeros((10,), np.float32)
+    return params
+
+
+def total_params(params: Dict[str, np.ndarray]) -> int:
+    return int(sum(int(p.size) for p in params.values()))
+
+
+def conv_stack(params: Dict[str, np.ndarray]) -> List[Tuple[str, np.ndarray]]:
+    """The TT targets: every conv/fc weight tensor, in network order."""
+    return [(k, v) for k, v in params.items() if k.endswith(".w")]
+
+
+if __name__ == "__main__":
+    p = resnet32_params()
+    print(f"resnet32 params: {total_params(p):,} "
+          f"({total_params(p) / 1e6:.2f}M, paper: 0.47M)")

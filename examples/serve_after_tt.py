@@ -1,0 +1,113 @@
+"""Fig. 1, receiving side: reconstruct TT-shipped weights, then serve.
+
+An edge node receives model parameters in TT format (the compressed
+payload an aggregator broadcast), reconstructs them (eq. (1)/(2) chained
+contractions), and serves batched decode requests with a KV cache —
+demonstrating that TTD decoding slots in front of the serving path with
+bounded reconstruction error.
+
+Run:  PYTHONPATH=src python examples/serve_after_tt.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import CompressionPolicy, TTCompressor
+from repro.launch.mesh import make_host_mesh
+from repro.models.registry import build
+
+
+def _pretend_trained(p: jax.Array, alpha: float = 1.0) -> jax.Array:
+    """Reshape a ≥2D param's spectrum to s_i ∝ i^-alpha (trained-net-like)."""
+    if p.ndim < 2 or p.size < 8192:
+        return p
+    mat = np.asarray(p, np.float32).reshape(p.shape[0], -1)
+    u, s, vt = np.linalg.svd(mat, full_matrices=False)
+    target = s[0] * (np.arange(1, s.size + 1.0) ** -alpha)
+    out = (u * target) @ vt
+    return jnp.asarray(out.reshape(p.shape), p.dtype)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--eps", type=float, default=0.2)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build(cfg)
+    mesh = make_host_mesh()
+    jax.set_mesh(mesh)
+    rng = np.random.default_rng(0)
+
+    # --- sender: compress trained-ish params into the TT payload ----------
+    # random init has a flat spectrum (incompressible by design — the
+    # policy correctly refuses); impose the power-law spectral decay of
+    # trained weights so the demo exercises the TT path.
+    params = jax.tree.map(_pretend_trained, model.init(jax.random.PRNGKey(0)))
+    comp = TTCompressor(CompressionPolicy(eps=args.eps, min_size=8192))
+    payload, report = comp.compress(params)
+    print(f"[serve] wire payload: {report.total_params:,} -> "
+          f"{report.payload_params:,} params ({report.ratio:.2f}x)")
+
+    # --- receiver: reconstruct and serve ----------------------------------
+    t0 = time.time()
+    params_rx = comp.decompress(payload)
+    print(f"[serve] TT decode (eq. 1/2 contractions) in "
+          f"{time.time() - t0:.2f}s")
+    errs = [
+        float(jnp.linalg.norm(a - b) / (jnp.linalg.norm(b) + 1e-9))
+        for a, b in zip(jax.tree.leaves(params_rx), jax.tree.leaves(params))
+    ]
+    print(f"[serve] max per-tensor reconstruction rel_err: {max(errs):.4f} "
+          f"(ε={args.eps})")
+
+    b = args.batch
+    max_len = args.prompt_len + args.gen
+    cache = model.init_cache(b, max_len)
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    prompts = rng.integers(0, cfg.vocab_size, (b, args.prompt_len), np.int32)
+
+    logits = None
+    t0 = time.time()
+    for i in range(args.prompt_len):
+        logits, cache = decode(params_rx, cache,
+                               jnp.asarray(prompts[:, i:i + 1]))
+    logits_prompt_tt = logits            # position-aligned comparison point
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    toks = [np.asarray(tok)]
+    for _ in range(args.gen - 1):
+        logits, cache = decode(params_rx, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        toks.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    dt = time.time() - t0
+    gen = np.concatenate(toks, axis=1)
+    print(f"[serve] {b} requests × {args.gen} tokens in {dt:.1f}s "
+          f"({b * args.gen / dt:.1f} tok/s on CPU)")
+
+    # greedy decode with original vs reconstructed params should mostly agree
+    cache2 = model.init_cache(b, max_len)
+    logits2 = None
+    for i in range(args.prompt_len):
+        logits2, cache2 = decode(params, cache2,
+                                 jnp.asarray(prompts[:, i:i + 1]))
+    agree = float(jnp.mean(
+        (jnp.argmax(logits_prompt_tt, -1) == jnp.argmax(logits2, -1)).astype(
+            jnp.float32)))
+    print(f"[serve] next-token agreement (TT vs dense weights): {agree:.2%}")
+    print("[serve] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Architecture registry: one module per assigned arch, plus the paper's own
+ResNet-32 TTD workload (``resnet32_ttd``)."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    HybridConfig,
+    ShapeConfig,
+    SHAPES,
+    applicable_shapes,
+)
+
+ARCH_IDS = [
+    "mamba2_1p3b",
+    "qwen1p5_0p5b",
+    "gemma3_1b",
+    "qwen3_32b",
+    "qwen3_8b",
+    "recurrentgemma_2b",
+    "olmoe_1b_7b",
+    "dbrx_132b",
+    "seamless_m4t_large_v2",
+    "pixtral_12b",
+]
+
+# canonical assignment names → module ids
+NAME_TO_MODULE = {
+    "mamba2-1.3b": "mamba2_1p3b",
+    "qwen1.5-0.5b": "qwen1p5_0p5b",
+    "gemma3-1b": "gemma3_1b",
+    "qwen3-32b": "qwen3_32b",
+    "qwen3-8b": "qwen3_8b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "dbrx-132b": "dbrx_132b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "pixtral-12b": "pixtral_12b",
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    """Look up an architecture config by assignment name or module id."""
+    mod_name = NAME_TO_MODULE.get(name, name.replace("-", "_").replace(".", "p"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {name: get_config(name) for name in NAME_TO_MODULE}

@@ -1,0 +1,176 @@
+"""Config system: architecture and shape descriptions for the 10-arch zoo.
+
+Every assigned architecture is one ``ModelConfig`` in its own module
+(``repro/configs/<id>.py``), selectable by ``--arch <id>`` in the launchers.
+``SHAPES`` defines the four assigned input-shape cells; per-arch skips
+(long_500k on pure full-attention archs, per DESIGN.md §6) are encoded in
+``applicable_shapes``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    num_experts_per_tok: int
+    d_ff: int                     # per-expert hidden size
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128          # N — SSD state size
+    head_dim: int = 64            # P — channels per SSM head
+    expand: int = 2               # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 256              # SSD chunk length
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """recurrentgemma-style mixed blocks."""
+    pattern: Tuple[str, ...] = ("rglru", "rglru", "attn")
+    lru_width: Optional[int] = None
+    window: int = 2048
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | ssm | hybrid | moe | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    act: str = "silu"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    logit_softcap: Optional[float] = None
+    # local/global attention (gemma3): every ``global_every``-th layer global
+    window: Optional[int] = None
+    global_every: Optional[int] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    # encoder-decoder
+    enc_layers: int = 0
+    # modality frontend stub: 'frames' (audio) | 'patches' (vision) | None
+    frontend: Optional[str] = None
+    frontend_len: int = 0         # stub sequence length of the frontend
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # distribution tuning
+    fsdp: bool = True             # shard params/opt-state over the data axis
+    microbatch: int = 8           # grad-accumulation microbatches per step
+    notes: str = ""
+    # ---- beyond-paper perf knobs (EXPERIMENTS.md §Perf; all default OFF so
+    # the recorded baseline is the paper-faithful configuration) ----------
+    opt_attn_remat: bool = False   # remat each attention q-chunk: the S²
+                                   # score stack never becomes a scan residual
+    opt_bf16_probs: bool = False   # post-softmax probabilities in bf16 for
+                                   # the PV matmul (f32 accumulation)
+    opt_bf16_scores: bool = False  # QKᵀ logits stored bf16 (softmax math
+                                   # still f32 inside the fused reduction)
+    opt_causal_unroll: bool = False  # static causal K-slicing per q-chunk:
+                                     # never compute all-masked future blocks
+    opt_moe_ep: bool = False         # pin expert-parallel activation layout
+                                     # (dispatch all-to-all; no d_ff partial-
+                                     # sum all-reduce over the model axis)
+    opt_moe_tp: bool = False         # shard expert weights on d_ff (Megatron
+                                     # TP): one (cap,D) all-reduce per FFN
+                                     # instead of partial-sums of (cap,d_ff)
+    opt_moe_a2a: bool = False        # explicit shard_map all-to-all EP
+                                     # dispatch (textbook EP; GSPMD cannot
+                                     # infer it through the scatter)
+    opt_pad_vocab: bool = False      # pad embedding rows to a multiple of
+                                     # 256 so vocab SHARDS on the model axis
+                                     # (unsharded-vocab logits are fatal at
+                                     # 256206×tokens, see §Perf seamless)
+    opt_batch_pin: bool = False      # re-constrain the batch dim to the data
+                                     # axis inside every block (GSPMD drops
+                                     # it across enc-dec scan boundaries)
+
+    @property
+    def padded_vocab_size(self) -> int:
+        if self.opt_pad_vocab:
+            return (self.vocab_size + 255) // 256 * 256
+        return self.vocab_size
+
+    def with_opts(self, names) -> "ModelConfig":
+        """dataclasses.replace with opt_<name>=True for each name."""
+        import dataclasses as _dc
+        fields = {f"opt_{n.strip()}": True for n in names if n.strip()}
+        known = {f.name for f in _dc.fields(self)}
+        unknown = set(fields) - known
+        if unknown:
+            raise ValueError(f"unknown opt flags: {sorted(unknown)}")
+        return _dc.replace(self, **fields)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Smoke-test-sized variant of the same family (tiny dims)."""
+        base = dict(
+            num_layers=min(self.num_layers, 2 if self.hybrid is None else 3),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads > 1 else 1,
+            d_ff=256,
+            vocab_size=512,
+            head_dim=32 if self.head_dim else None,
+            frontend_len=8 if self.frontend else 0,
+            enc_layers=2 if self.enc_layers else 0,
+            microbatch=1,
+        )
+        if self.moe:
+            base["moe"] = MoEConfig(
+                num_experts=8, num_experts_per_tok=2, d_ff=64
+            )
+        if self.ssm:
+            base["ssm"] = SSMConfig(state_dim=16, head_dim=16, chunk=32)
+        if self.hybrid:
+            base["hybrid"] = HybridConfig(
+                pattern=self.hybrid.pattern, lru_width=128, window=32
+            )
+        if self.window:
+            base["window"] = 32
+        base.update(overrides)
+        return dataclasses.replace(self, **base)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# archs whose attention is sub-quadratic (long_500k applicable).
+SUBQUADRATIC = {"mamba2-1.3b", "recurrentgemma-2b", "gemma3-1b"}
+
+
+def applicable_shapes(cfg: ModelConfig):
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.name in SUBQUADRATIC:
+        out.append("long_500k")
+    return out

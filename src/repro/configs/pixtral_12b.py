@@ -1,0 +1,20 @@
+"""pixtral-12b — pixtral-ViT frontend STUB + mistral-nemo-style decoder
+backbone [hf:mistralai/Pixtral-12B-2409]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=131_072,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    frontend="patches",       # STUB: input_specs() provides patch embeddings
+    frontend_len=256,         # patches per image prepended to the sequence
+    tie_embeddings=False,
+    microbatch=8,
+)

@@ -1,0 +1,47 @@
+"""repro.core — the paper's contribution: TT decomposition via two-phase SVD.
+
+Public surface:
+  hbd.householder_bidiagonalize   — paper Algorithm 2 (phase 1)
+  bidiag_qr.bidiag_svd_values     — phase 2 oracle (Golub–Kahan QR)
+  svd.svd                          — two-phase SVD (+ sorting_basis)
+  truncation.*                     — δ-truncation (Alg. 1 lines 27-31)
+  tt.ttd / tt.ttd_static           — Algorithm 1 (offline / in-graph)
+  tt.tt_reconstruct                — eq. (1)/(2) decoding
+  baselines.tucker_hosvd / tr_svd  — Table-I comparison methods
+  compression.TTCompressor         — pytree-level model compression API
+  comm_compress.*                  — FedTTD cross-pod TT-compressed sync
+  blocked.*                        — WY-blocked HBD (beyond-paper, MXU form)
+"""
+
+from repro.core.hbd import householder_bidiagonalize, house, house_mm_update
+from repro.core.svd import svd, sorting_basis, svd_reconstruct, SVDResult
+from repro.core.truncation import (
+    delta_threshold,
+    truncation_rank,
+    truncation_rank_static,
+    truncate_masked,
+    tail_norms,
+)
+from repro.core.tt import (
+    TTTensor,
+    StaticTT,
+    ttd,
+    ttd_static,
+    tt_reconstruct,
+    static_tt_reconstruct,
+    tensorize_shape,
+    auto_factorize,
+    tt_max_ranks,
+)
+from repro.core.compression import (
+    CompressionPolicy,
+    TTCompressor,
+    compress_param,
+    decompress_param,
+)
+from repro.core.comm_compress import (
+    CommCompressionConfig,
+    pod_sync_tt,
+    pod_sync_dense,
+    fedttd_roundtrip,
+)

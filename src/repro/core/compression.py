@@ -1,0 +1,134 @@
+"""TTCompressor — the public model-compression API (paper Fig. 1 workflow).
+
+Compresses a pytree of model parameters into TT format for transmission
+(the "edge → cloud" direction) and reconstructs on arrival.  This is the
+framework-level face of the paper's contribution: a compression policy
+decides, per parameter, whether/how to tensorize, and the TT-SVD engine
+(two-phase HBD SVD) does the factorization.
+
+Policy defaults follow DESIGN.md §5:
+  * params with fewer than ``min_size`` elements are sent raw (routers,
+    norms, biases — TT overhead would exceed the payload);
+  * matrices/embeddings are re-tensorized with balanced factors
+    (TT-Rec-style) to depth >= ``min_dims``;
+  * conv kernels (4D) keep their natural dims;
+  * a parameter is only kept in TT form if it actually compresses
+    (ratio > 1), otherwise raw — same accept/reject the paper's δ-rule
+    effectively applies.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tt as _tt
+
+
+@dataclass
+class CompressionPolicy:
+    eps: float = 0.05
+    min_size: int = 4096            # below this, send raw
+    max_factor: int = 64            # balanced tensorization factor cap
+    min_dims: int = 3               # tensorize to at least this many dims
+    max_rank: Optional[int] = None
+    svd_method: str = "two_phase"
+    hbd_impl: str = "unblocked"
+
+
+@dataclass
+class CompressedParam:
+    kind: str                        # "tt" | "raw"
+    tt: Optional[_tt.TTTensor]
+    raw: Optional[jax.Array]
+    orig_shape: Tuple[int, ...]
+    orig_dtype: Any
+
+    @property
+    def payload_params(self) -> int:
+        if self.kind == "tt":
+            return self.tt.num_params
+        return int(np.prod(self.orig_shape))
+
+
+@dataclass
+class CompressionReport:
+    total_params: int
+    payload_params: int
+    per_param: Dict[str, Tuple[str, int, int]] = field(default_factory=dict)
+
+    @property
+    def ratio(self) -> float:
+        return self.total_params / max(self.payload_params, 1)
+
+
+def _tensorize_dims(shape: Tuple[int, ...], policy: CompressionPolicy):
+    if len(shape) >= policy.min_dims:
+        return list(shape)
+    dims = _tt.tensorize_shape(shape, policy.max_factor)
+    if len(dims) < policy.min_dims:
+        dims = _tt.tensorize_shape(shape, max(8, policy.max_factor // 8))
+    return dims
+
+
+def compress_param(x: jax.Array, policy: CompressionPolicy) -> CompressedParam:
+    shape = tuple(x.shape)
+    size = int(np.prod(shape))
+    if size < policy.min_size or min(shape or (1,)) == 0:
+        return CompressedParam("raw", None, x, shape, x.dtype)
+    dims = _tensorize_dims(shape, policy)
+    if len(dims) < 2:
+        return CompressedParam("raw", None, x, shape, x.dtype)
+    tt = _tt.ttd(
+        x,
+        eps=policy.eps,
+        dims=dims,
+        svd_method=policy.svd_method,
+        hbd_impl=policy.hbd_impl,
+        max_rank=policy.max_rank,
+    )
+    if tt.num_params >= size:                     # reject non-compressions
+        return CompressedParam("raw", None, x, shape, x.dtype)
+    return CompressedParam("tt", tt, None, shape, x.dtype)
+
+
+def decompress_param(c: CompressedParam) -> jax.Array:
+    if c.kind == "raw":
+        return c.raw
+    w = _tt.tt_reconstruct(c.tt)
+    return w.reshape(c.orig_shape).astype(c.orig_dtype)
+
+
+class TTCompressor:
+    """Compress/decompress pytrees of parameters for transmission."""
+
+    def __init__(self, policy: Optional[CompressionPolicy] = None):
+        self.policy = policy or CompressionPolicy()
+
+    def compress(self, params) -> Tuple[Any, CompressionReport]:
+        leaves, treedef = jax.tree.flatten(params)
+        paths = [
+            "/".join(str(k) for k in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(params)[0]
+        ]
+        out = []
+        report = CompressionReport(total_params=0, payload_params=0)
+        for name, leaf in zip(paths, leaves):
+            c = compress_param(jnp.asarray(leaf), self.policy)
+            out.append(c)
+            size = int(np.prod(c.orig_shape))
+            report.total_params += size
+            report.payload_params += c.payload_params
+            report.per_param[name] = (c.kind, size, c.payload_params)
+        return jax.tree.unflatten(treedef, out), report
+
+    def decompress(self, compressed) -> Any:
+        return jax.tree.map(
+            decompress_param,
+            compressed,
+            is_leaf=lambda x: isinstance(x, CompressedParam),
+        )

@@ -1,0 +1,80 @@
+"""δ-Truncation (paper Alg. 1 lines 27-31) and the TRUNCATION-module math.
+
+Two faces of the same rule:
+
+* ``truncation_rank``      — concrete (host/NumPy) path with a dynamic rank,
+                             used by the offline compressor.
+* ``truncation_rank_static`` / ``truncate_masked`` — jittable path: the rank
+                             is computed in-graph but factor shapes stay at
+                             r_max with the tail *zero-masked*.  This mirrors
+                             the paper's hardware, which also allocates
+                             worst-case SPM buffers and tracks the live rank
+                             r_k in a register.
+
+The paper's rule (1-indexed): keep k columns where
+    k = min { i : ||Σ_s[i:rank]||_F < δ }
+(i.e. the smallest leading block whose *inclusive* tail already fits under
+δ; the discarded strict tail then satisfies ||·||_F < δ).  If no i
+satisfies the bound, everything is kept.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def delta_threshold(eps: float, num_dims: int, frob_norm) -> jax.Array:
+    """δ = ε/√(d-1) · ||W||_F  (Alg. 1 line 5)."""
+    return eps / np.sqrt(max(num_dims - 1, 1)) * frob_norm
+
+
+def tail_norms(s: jax.Array) -> jax.Array:
+    """t[i] = ||s[i:]||_2 — the TRUNCATION module's reverse-Frobenius scan."""
+    tail_sq = jnp.cumsum((s * s)[::-1])[::-1]
+    return jnp.sqrt(tail_sq)
+
+
+def truncation_rank(s: np.ndarray, delta: float) -> int:
+    """Concrete-rank δ-truncation (paper semantics, 0-indexed result)."""
+    s = np.asarray(s)
+    t = np.sqrt(np.cumsum((s * s)[::-1])[::-1])
+    hits = np.nonzero(t < delta)[0]
+    if hits.size == 0:
+        return int(s.shape[0])
+    # paper keeps columns 1..k for the smallest 1-indexed i with tail < δ
+    return max(int(hits[0]) + 1, 1) if hits[0] > 0 else 1
+
+
+def truncation_rank_static(s: jax.Array, delta: jax.Array) -> jax.Array:
+    """In-graph rank (same rule); returns a traced int32 scalar."""
+    t = tail_norms(s)
+    cond = t < delta
+    any_hit = jnp.any(cond)
+    first = jnp.argmax(cond)  # first True (cond is monotone non-decreasing)
+    rank = jnp.where(any_hit, jnp.maximum(first + 1, 1), s.shape[0])
+    # never exceed the number of singular values; rank 0 is not a TT rank
+    return jnp.clip(rank, 1, s.shape[0]).astype(jnp.int32)
+
+
+def truncate_masked(
+    u: jax.Array, s: jax.Array, vt: jax.Array, delta: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Jittable δ-truncation with static shapes: tail columns/rows zeroed.
+
+    Returns (U_t, Σ_t, V_t^T, rank) where the factors keep their full
+    min(M,N) extent but entries beyond ``rank`` are exactly zero, so
+    U_t diag(Σ_t) V_t^T equals the dynamically-truncated product.
+    """
+    rank = truncation_rank_static(s, delta)
+    k = jnp.arange(s.shape[0])
+    keep = k < rank
+    return (
+        u * keep[None, :].astype(u.dtype),
+        s * keep.astype(s.dtype),
+        vt * keep[:, None].astype(vt.dtype),
+        rank,
+    )

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+Paper-derived (the TTD-Engine datapaths):
+  householder    — HBD-ACC panel factorization (HOUSE/VEC-DIV/REQUEST-GEMM)
+  block_update   — compact-WY trailing update (two MXU GEMMs, V,T in VMEM)
+  singular_sort  — SORTING module (bitonic network + index vector)
+  frob_truncate  — TRUNCATION module (reverse-‖·‖F scan vs δ)
+
+Architecture-zoo hot spot:
+  flash_attention — online-softmax prefill attention (causal/windowed/GQA)
+"""
+
+from repro.kernels.block_update.ops import block_wy_update, wy_update_ref
+from repro.kernels.householder.ops import (
+    panel_factor,
+    panel_factor_ref,
+    qr_blocked,
+)
+from repro.kernels.flash_attention.ops import mha_flash, attention_ref
+from repro.kernels.singular_sort.ops import (
+    sort_singular_values,
+    sorting_basis as kernel_sorting_basis,
+)
+from repro.kernels.frob_truncate.ops import delta_truncate, frob_truncate_ref

@@ -1,0 +1,95 @@
+"""WY trailing-matrix update kernel — the TTD-Engine's REQUEST-GEMM stage.
+
+Computes  A_out = A - V · (Tᵀ · (Vᵀ · A))   (compact-WY block reflector)
+
+as two MXU GEMM passes, with the Householder panel (V, T) resident in VMEM
+across both — the TPU transliteration of TT-Edge's two design points:
+"reflector application = two GEMMs on the existing GEMM array" and
+"Householder vectors stay in the SPM".
+
+Pass 1 (``_vta_kernel``):   Y = Vᵀ A          grid (N/bn, M/bm), accumulate
+                                               over the M-tile axis
+Pass 2 (``_update_kernel``): A_out = A - V W   with W = Tᵀ Y precomputed in
+                                               pass 1.5 (a b×b · b×bn GEMM
+                                               folded into pass 2's prologue)
+
+Tile shapes are MXU-aligned (multiples of 128 where the problem allows).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vta_kernel(v_ref, a_ref, y_ref):
+    """Y[b, bn] += V[bm, b]^T @ A[bm, bn]; M-tile axis accumulates."""
+    m_idx = pl.program_id(1)
+
+    @pl.when(m_idx == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += jnp.dot(
+        v_ref[...].T, a_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _update_kernel(a_ref, v_ref, w_ref, out_ref):
+    """A_out[bm, bn] = A[bm, bn] - V[bm, b] @ W[b, bn]."""
+    acc = a_ref[...].astype(jnp.float32) - jnp.dot(
+        v_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "interpret")
+)
+def wy_update(
+    a: jax.Array,
+    v: jax.Array,
+    t: jax.Array,
+    bm: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """A - V Tᵀ Vᵀ A with (M, N) A, (M, b) V, (b, b) T.  M, N must be
+    divisible by (bm, bn) — ops.py pads."""
+    m, n = a.shape
+    b = v.shape[1]
+    assert m % bm == 0 and n % bn == 0, (a.shape, bm, bn)
+
+    # ---- pass 1: Y = V^T A  (grid: N tiles outer, M tiles inner/accum) ----
+    y = pl.pallas_call(
+        _vta_kernel,
+        grid=(n // bn, m // bm),
+        in_specs=[
+            pl.BlockSpec((bm, b), lambda j, i: (i, 0)),       # V tile
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),      # A tile
+        ],
+        out_specs=pl.BlockSpec((b, bn), lambda j, i: (0, j)),  # Y tile
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(v, a)
+
+    # ---- pass 1.5: W = T^T Y (small b×b GEMM; XLA fuses it) ----
+    w = t.T.astype(jnp.float32) @ y
+
+    # ---- pass 2: A_out = A - V W ----
+    out = pl.pallas_call(
+        _update_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),      # A tile
+            pl.BlockSpec((bm, b), lambda i, j: (i, 0)),       # V tile (VMEM-resident)
+            pl.BlockSpec((b, bn), lambda i, j: (0, j)),       # W tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, v, w.astype(a.dtype))
+    return out

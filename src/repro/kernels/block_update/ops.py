@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the WY trailing-update kernel (pads + dispatches)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.block_update.kernel import wy_update as _kernel
+from repro.kernels.block_update.ref import wy_update_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_wy_update(
+    a: jax.Array, v: jax.Array, t: jax.Array, interpret: bool | None = None
+) -> jax.Array:
+    """A ← (I − V T Vᵀ)ᵀ A = A − V Tᵀ Vᵀ A with automatic padding/tiling.
+
+    a: (M, N) trailing matrix; v: (M, b) panel reflectors; t: (b, b) WY factor.
+    """
+    if interpret is None:
+        interpret = common.use_interpret()
+    m, n = a.shape
+    bm = common.pick_tile(m)
+    bn = common.pick_tile(n)
+    mp = common.round_up(m, bm)
+    np_ = common.round_up(n, bn)
+    a_p = common.pad_to(a, mp, np_)
+    v_p = common.pad_to(v, mp, v.shape[1])
+    out = _kernel(a_p, v_p, t, bm=bm, bn=bn, interpret=interpret)
+    return out[:m, :n]
+
+
+__all__ = ["block_wy_update", "wy_update_ref"]

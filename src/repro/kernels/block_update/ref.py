@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the WY trailing update."""
+
+import jax
+import jax.numpy as jnp
+
+
+def wy_update_ref(a: jax.Array, v: jax.Array, t: jax.Array) -> jax.Array:
+    """A - V Tᵀ Vᵀ A, computed in fp32, cast back to A's dtype."""
+    a32 = a.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+    t32 = t.astype(jnp.float32)
+    y = v32.T @ a32
+    return (a32 - v32 @ (t32.T @ y)).astype(a.dtype)

@@ -1,0 +1,47 @@
+"""Shared kernel plumbing: interpret-mode autodetection and tiling helpers.
+
+All kernels in this package target TPU (pl.pallas_call with explicit
+BlockSpec VMEM tiling, MXU-aligned tile shapes).  On non-TPU backends —
+including this CPU container — the jit'd wrappers in each ``ops.py`` pass
+``interpret=True`` so the kernel body executes exactly as written and can be
+validated against the ``ref.py`` oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+# MXU native tile; VPU lane width.  All kernel tile shapes are multiples.
+MXU_DIM = 128
+VPU_LANES = 128
+# v5e VMEM budget per core we design against (bytes).
+VMEM_BUDGET = 96 * 1024 * 1024
+
+
+def use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pick_tile(dim: int, target: int = MXU_DIM, cap: int = 512) -> int:
+    """Largest hardware-aligned tile <= cap that divides the (padded) dim."""
+    if dim <= target:
+        return round_up(max(dim, 1), 8)
+    t = target
+    while t * 2 <= cap and dim % (t * 2) == 0:
+        t *= 2
+    return t
+
+
+def pad_to(x, rows: int, cols: int):
+    """Zero-pad a 2D array up to (rows, cols)."""
+    import jax.numpy as jnp
+
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))

@@ -1,0 +1,104 @@
+"""Flash attention (prefill) Pallas kernel — online-softmax tiled attention.
+
+Not part of the paper's contribution, but the perf-critical compute layer of
+the architecture zoo this framework must serve (DESIGN.md §3).  Grid is
+(batch·heads, Q blocks); K/V for the head stream through VMEM while the
+(bq, d) query block and the online-softmax state stay resident.
+
+Supports causal masking and an optional sliding window (gemma3 /
+recurrentgemma local-attention layers).  For dry-run lowering on the 512-way
+mesh the models use the pure-XLA chunked path (``models/attention.py``);
+this kernel is the TPU execution target and is validated in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, sm_scale,
+                  causal, window, seq_len):
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :].astype(jnp.float32) * sm_scale      # (bq, d)
+    d = q.shape[-1]
+    q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)
+
+    nkv = seq_len // bk
+
+    def body(kv_i, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[0, pl.dslice(kv_i * bk, bk), :].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(kv_i * bk, bk), :].astype(jnp.float32)
+        s = q @ k.T                                        # (bq, bk) MXU
+        k_pos = kv_i * bk + jax.lax.iota(jnp.int32, bk)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v                 # MXU
+        return acc, m_cur, l_cur
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+
+    if causal:
+        # skip fully-masked KV blocks beyond the diagonal
+        hi = jnp.minimum((qi + 1) * bq, seq_len)
+        nkv_live = pl.cdiv(hi, bk)
+    else:
+        nkv_live = nkv
+    acc, m, l = jax.lax.fori_loop(0, nkv_live, body, (acc0, m0, l0))
+    l = jnp.where(l == 0, 1.0, l)
+    o_ref[0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bk", "causal", "window", "sm_scale", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    sm_scale: float | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q, k, v: (BH, S, D) — batch·heads flattened.  Returns (BH, S, D)."""
+    bh, s, d = q.shape
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+
+    kern = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, sm_scale=sm_scale,
+        causal=causal, window=window, seq_len=s,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(bh, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

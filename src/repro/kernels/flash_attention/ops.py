@@ -1,0 +1,48 @@
+"""jit'd wrapper: shape plumbing for (B, H, S, D) attention + GQA expansion."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "interpret")
+)
+def mha_flash(
+    q: jax.Array,            # (B, S, Hq, D)
+    k: jax.Array,            # (B, S, Hkv, D)
+    v: jax.Array,            # (B, S, Hkv, D)
+    causal: bool = True,
+    window: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """GQA-aware flash attention: repeats KV heads to match Q heads, flattens
+    (B, H) into the kernel grid, picks hardware-aligned block sizes."""
+    if interpret is None:
+        interpret = common.use_interpret()
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    bq = min(128, s)
+    bk = min(128, s)
+    out = _kernel(
+        qf, kf, vf, causal=causal, window=window, bq=bq, bk=bk,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, s, d).transpose(0, 2, 1, 3)
+
+
+__all__ = ["mha_flash", "attention_ref"]

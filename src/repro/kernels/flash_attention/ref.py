@@ -1,0 +1,31 @@
+"""Dense-softmax oracle for the flash attention kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    sm_scale: float | None = None,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    """q, k, v: (BH, S, D).  Materializes the full score matrix."""
+    bh, s_len, d = q.shape
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    scores = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    qp = jnp.arange(s_len)[:, None]
+    kp = jnp.arange(s_len)[None, :]
+    mask = jnp.ones((s_len, s_len), bool)
+    if causal:
+        mask &= qp >= kp
+    if window is not None:
+        mask &= qp - kp < window
+    scores = jnp.where(mask[None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

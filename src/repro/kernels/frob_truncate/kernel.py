@@ -1,0 +1,61 @@
+"""δ-truncation kernel — the TRUNCATION module on TPU.
+
+The paper's TRUNCATION module walks the tail of the singular-value vector,
+forms the error vector e, and checks ‖e‖₂ > δ, decrementing the rank until
+the accuracy target holds.  The vectorized equivalent is one reverse
+cumulative sum of squares (the whole FSM collapses into a scan) followed by
+a thresholded argmax — a single VMEM pass.
+
+Outputs: tail norms t[i] = ‖σ[i:]‖₂ and the paper's kept rank r
+(smallest 1-indexed i with t[i] < δ; everything if none).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _truncate_kernel(s_ref, delta_ref, tail_ref, rank_ref, *, n):
+    s = s_ref[0, :].astype(jnp.float32)
+    delta = delta_ref[0, 0]
+    sq = s * s
+    tail_sq = jnp.cumsum(sq[::-1])[::-1]
+    tail = jnp.sqrt(tail_sq)
+    cond = tail < delta
+    any_hit = jnp.any(cond)
+    first = jnp.argmax(cond)
+    rank = jnp.where(any_hit, jnp.maximum(first + 1, 1), n)
+    tail_ref[0, :] = tail
+    rank_ref[0, 0] = jnp.clip(rank, 1, n).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def frob_truncate(s: jax.Array, delta, interpret: bool = False):
+    """Returns (tail_norms (n,), rank scalar int32) for σ vector ``s``."""
+    n = s.shape[0]
+    kern = functools.partial(_truncate_kernel, n=n)
+    tail, rank = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(
+        s[None, :].astype(jnp.float32),
+        jnp.asarray(delta, jnp.float32).reshape(1, 1),
+    )
+    return tail[0], rank[0, 0]

@@ -1,0 +1,22 @@
+"""jit'd wrapper for the δ-truncation kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import common
+from repro.kernels.frob_truncate.kernel import frob_truncate as _kernel
+from repro.kernels.frob_truncate.ref import frob_truncate_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_truncate(s: jax.Array, delta, interpret: bool | None = None):
+    """(tail_norms, rank) under the paper's δ rule (Alg. 1 line 28)."""
+    if interpret is None:
+        interpret = common.use_interpret()
+    return _kernel(s, delta, interpret=interpret)
+
+
+__all__ = ["delta_truncate", "frob_truncate_ref"]

@@ -1,0 +1,12 @@
+"""Oracle for the δ-truncation kernel: repro.core.truncation semantics."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import truncation as _trunc
+
+
+def frob_truncate_ref(s: jax.Array, delta):
+    tail = _trunc.tail_norms(s.astype(jnp.float32))
+    rank = _trunc.truncation_rank_static(s.astype(jnp.float32), delta)
+    return tail, rank

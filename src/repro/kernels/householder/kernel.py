@@ -1,0 +1,97 @@
+"""Householder panel-factorization kernel — the HBD-ACC datapath on TPU.
+
+One grid program factors a full (M, b) column panel **entirely in VMEM**:
+for each column j it runs the paper's four HBD-ACC stages —
+
+  PREPARE      : select the active column (address calculation ≡ BlockSpec)
+  HOUSE        : norm + pivot  q = -sign(x₁)‖x‖,  v₁ = x₁ + sign(x₁)‖x‖
+  VEC DIVISION : v ← v / v₁   (LAPACK normalization; β folded into τ)
+  REQUEST GEMM : panel update  A ← A − τ v (vᵀ A)   as two in-VMEM GEMMs
+
+— with the Householder vectors accumulating in a VMEM-resident buffer, never
+leaving the chip until the panel is done.  That buffer is the TPU analogue
+of TT-Edge's "Householder vectors retained in the SPM".
+
+The trailing matrix (everything right of the panel) is updated separately by
+``kernels/block_update`` in compact-WY form — the "reuse the GEMM
+accelerator" half of the design.
+
+Outputs: V (M, b) normalized reflectors (unit diagonal, zero above),
+         taus (1, b), and R (b, b) — the panel's triangular factor.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _panel_kernel(a_ref, v_ref, tau_ref, r_ref):
+    m, b = a_ref.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)[:, 0]
+
+    def col_step(j, carry):
+        acc, vs, taus = carry
+        mask = rows >= j
+        x = jnp.where(mask, acc[:, j], 0.0)
+        # ---- HOUSE ----
+        norm = jnp.sqrt(jnp.sum(x * x))
+        x1 = jnp.sum(jnp.where(rows == j, x, 0.0))
+        s = jnp.where(x1 >= 0, 1.0, -1.0)
+        pivot = -s * norm
+        v1 = x1 + s * norm
+        safe = jnp.abs(v1) > 0
+        # ---- VEC DIVISION ----
+        v = jnp.where(mask, x / jnp.where(safe, v1, 1.0), 0.0)
+        v = jnp.where(rows == j, jnp.where(safe, 1.0, 0.0), v)
+        tau = jnp.where(safe, s * v1 / jnp.where(norm == 0, 1.0, norm), 0.0)
+        # ---- REQUEST GEMM (panel-internal; two GEMMs) ----
+        w = v @ acc                                     # (b,)  GEMM #1
+        acc = acc - tau * v[:, None] * w[None, :]        # (M,b) GEMM #2 (rank-1)
+        # store pivot on the diagonal, retain v below it
+        acc = jnp.where(
+            (rows == j)[:, None] & (jax.lax.iota(jnp.int32, b) == j)[None, :],
+            pivot,
+            acc,
+        )
+        vs = jnp.where((jax.lax.iota(jnp.int32, b) == j)[None, :], v[:, None], vs)
+        taus = jnp.where(jax.lax.iota(jnp.int32, b) == j, tau, taus)
+        return acc, vs, taus
+
+    acc0 = a_ref[...].astype(jnp.float32)
+    vs0 = jnp.zeros((m, b), jnp.float32)
+    taus0 = jnp.zeros((b,), jnp.float32)
+    acc, vs, taus = jax.lax.fori_loop(0, b, col_step, (acc0, vs0, taus0))
+
+    v_ref[...] = vs
+    tau_ref[...] = taus[None, :]
+    # R: upper-triangular b×b head of the reduced panel
+    cols = jax.lax.iota(jnp.int32, b)
+    head = acc[:b, :]
+    r_ref[...] = jnp.where(cols[:, None] <= cols[None, :], head, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def panel_factor(a_panel: jax.Array, interpret: bool = False):
+    """Factor an (M, b) panel: returns (V (M,b), taus (b,), R (b,b))."""
+    m, b = a_panel.shape
+    v, tau, r = pl.pallas_call(
+        _panel_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((m, b), lambda i: (0, 0))],
+        out_specs=(
+            pl.BlockSpec((m, b), lambda i: (0, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, b), jnp.float32),
+            jax.ShapeDtypeStruct((1, b), jnp.float32),
+            jax.ShapeDtypeStruct((b, b), jnp.float32),
+        ),
+        interpret=interpret,
+    )(a_panel.astype(jnp.float32))
+    return v, tau[0], r

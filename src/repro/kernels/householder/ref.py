@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the Householder panel factorization."""
+
+import jax
+import jax.numpy as jnp
+
+
+def panel_factor_ref(a_panel: jax.Array):
+    """Unblocked Householder QR of an (M, b) panel.
+
+    Returns (V, taus, R) matching kernels/householder/kernel.py:
+    V (M, b) unit-lower reflectors, taus (b,), R (b, b) upper-triangular,
+    such that (I - tau_b v_b v_bᵀ)···(I - tau_1 v_1 v_1ᵀ) A = [R; 0].
+    """
+    a = a_panel.astype(jnp.float32)
+    m, b = a.shape
+    rows = jnp.arange(m)
+    vs = jnp.zeros((m, b), jnp.float32)
+    taus = jnp.zeros((b,), jnp.float32)
+
+    def step(j, carry):
+        acc, vs, taus = carry
+        mask = rows >= j
+        x = jnp.where(mask, acc[:, j], 0.0)
+        norm = jnp.linalg.norm(x)
+        x1 = x[j]
+        s = jnp.where(x1 >= 0, 1.0, -1.0)
+        pivot = -s * norm
+        v1 = x1 + s * norm
+        safe = jnp.abs(v1) > 0
+        v = jnp.where(mask, x / jnp.where(safe, v1, 1.0), 0.0)
+        v = v.at[j].set(jnp.where(safe, 1.0, 0.0))
+        tau = jnp.where(safe, s * v1 / jnp.where(norm == 0, 1.0, norm), 0.0)
+        w = v @ acc
+        acc = acc - tau * jnp.outer(v, w)
+        acc = acc.at[j, j].set(pivot)
+        return acc, vs.at[:, j].set(v), taus.at[j].set(tau)
+
+    acc, vs, taus = jax.lax.fori_loop(0, b, step, (a, vs, taus))
+    r = jnp.triu(acc[:b, :])
+    return vs, taus, r

@@ -1,0 +1,84 @@
+"""Bitonic singular-value sort kernel — the SORTING module on TPU.
+
+The paper's SORTING module bubble-sorts σ in the SPM while recording an
+index vector that later permutes U's columns and Vᵀ's rows.  A serial bubble
+sort is the bit-serial-hardware idiom; on a vector machine the same
+(sorted σ, index vector) contract is produced by a **bitonic sorting
+network** — compare-exchanges expressed as reshape/select over the
+VMEM-resident vector, log²(n) fully-vectorized stages, no data-dependent
+control flow.
+
+The kernel sorts DESCENDING and emits the paper's index vector; the basis
+permutation (Alg. 1 line 22) is a gather applied in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -3.4e38
+
+
+def _compare_exchange(s, idx, j, k, n):
+    """One bitonic stage: partner = i XOR j, descending iff (i AND k) == 0."""
+    s2 = s.reshape(n // (2 * j), 2, j)
+    i2 = idx.reshape(n // (2 * j), 2, j)
+    lo_s, hi_s = s2[:, 0, :], s2[:, 1, :]
+    lo_i, hi_i = i2[:, 0, :], i2[:, 1, :]
+    # block b covers indices [b*2j, (b+1)*2j); bit log2(k) of i is constant
+    # within the block because 2j <= k at every (k, j) stage of the network
+    base = jnp.arange(n // (2 * j)) * (2 * j)
+    desc = (base & k) == 0                       # descending regions
+    swap = jnp.where(desc[:, None], lo_s < hi_s, lo_s > hi_s)
+    new_lo_s = jnp.where(swap, hi_s, lo_s)
+    new_hi_s = jnp.where(swap, lo_s, hi_s)
+    new_lo_i = jnp.where(swap, hi_i, lo_i)
+    new_hi_i = jnp.where(swap, lo_i, hi_i)
+    s = jnp.stack([new_lo_s, new_hi_s], axis=1).reshape(n)
+    idx = jnp.stack([new_lo_i, new_hi_i], axis=1).reshape(n)
+    return s, idx
+
+
+def _sort_kernel(s_ref, out_s_ref, out_idx_ref, *, n):
+    s = s_ref[0, :].astype(jnp.float32)
+    idx = jax.lax.iota(jnp.int32, n)
+    k = 2
+    while k <= n:                                 # static: log n stages
+        j = k // 2
+        while j >= 1:
+            s, idx = _compare_exchange(s, idx, j, k, n)
+            j //= 2
+        k *= 2
+    out_s_ref[0, :] = s
+    out_idx_ref[0, :] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort_desc(s: jax.Array, interpret: bool = False):
+    """Sort (n,) descending; returns (sorted, index_vector).  Pads to a power
+    of two with -inf sentinels (dropped before returning)."""
+    n = s.shape[0]
+    n_pad = 1 << (n - 1).bit_length()
+    s_p = jnp.full((n_pad,), NEG_INF, jnp.float32)
+    s_p = s_p.at[:n].set(s.astype(jnp.float32))
+
+    kern = functools.partial(_sort_kernel, n=n_pad)
+    out_s, out_idx = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((1, n_pad), lambda i: (0, 0))],
+        out_specs=(
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+        ),
+        interpret=interpret,
+    )(s_p[None, :])
+    return out_s[0, :n].astype(s.dtype), out_idx[0, :n]

@@ -1,0 +1,35 @@
+"""jit'd wrapper: kernel sort + basis permutation (paper Alg. 1 lines 18-25)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.singular_sort.kernel import bitonic_sort_desc as _kernel
+from repro.kernels.singular_sort.ref import sort_desc_ref, sorting_basis_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_singular_values(s: jax.Array, interpret: bool | None = None):
+    if interpret is None:
+        interpret = common.use_interpret()
+    return _kernel(s, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sorting_basis(
+    u: jax.Array, s: jax.Array, vt: jax.Array, interpret: bool | None = None
+):
+    """Sorted (U_s, Σ_s, V_sᵀ) using the kernel's index vector for the
+    basis permutation — exactly the paper's SORTING-module contract."""
+    s_sorted, ind = sort_singular_values(s, interpret=interpret)
+    return u[:, ind], s_sorted, vt[ind, :]
+
+
+__all__ = [
+    "sort_singular_values", "sorting_basis", "sort_desc_ref",
+    "sorting_basis_ref",
+]

@@ -1,0 +1,15 @@
+"""argsort oracle for the bitonic sort kernel (paper Sorting_Basis)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def sort_desc_ref(s: jax.Array):
+    """Descending sort + index vector (the paper's Bubble_Sort contract)."""
+    idx = jnp.argsort(-s.astype(jnp.float32)).astype(jnp.int32)
+    return s[idx], idx
+
+
+def sorting_basis_ref(u: jax.Array, s: jax.Array, vt: jax.Array):
+    s_sorted, ind = sort_desc_ref(s)
+    return u[:, ind], s_sorted, vt[ind, :]

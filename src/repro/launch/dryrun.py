@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the production mesh, constructs
+ShapeDtypeStruct stand-ins for params/optimizer/batch/cache (no device
+allocation), jits the appropriate step with explicit in/out shardings,
+``.lower().compile()``s it, and records:
+
+  * memory_analysis()  — per-device bytes (proves the cell fits HBM)
+  * cost_analysis()    — per-device FLOPs / bytes for §Roofline
+  * collective schedule (parsed from the partitioned HLO)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] --out results/
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import NAME_TO_MODULE, get_config
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh, batch_axes
+from repro.launch.specs import input_specs, params_shape
+from repro.models.registry import build
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.roofline import analysis as roofline
+from repro.roofline import hlo_walk as _hlo_walk
+from repro.train.steps import TrainState, make_train_step, make_prefill_step
+
+
+def _sds(tree):
+    """Pytree → ShapeDtypeStructs with shardings attached."""
+    return tree
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               save_hlo: str | None = None, impl: str = "xla",
+               opts: str = "", microbatch: int | None = None):
+    cfg = get_config(arch)
+    if opts:
+        cfg = cfg.with_opts(opts.split(","))
+    if microbatch:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, microbatch=microbatch)
+    shape = SHAPES[shape_name]
+    if shape_name not in applicable_shapes(cfg):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "full-attention arch: long_500k not applicable "
+                          "(DESIGN.md §6)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shd.set_mesh_axis_sizes(mesh)
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    _hlo_walk.set_pod_size(mesh.devices.size // n_pods)
+    baxes = batch_axes(mesh)
+    model = build(cfg)
+    optimizer = AdamW(learning_rate=cosine_schedule(3e-4, 100, 10_000))
+    cell = input_specs(cfg, shape, optimizer if shape.kind == "train" else None)
+
+    p_specs = shd.param_specs(cell.params, cfg)
+    b_specs = shd.batch_specs(cell.batch, data_axes=baxes)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            opt_specs = _opt_specs(mesh, cell.opt, cell.params, cfg)
+            step = make_train_step(model, optimizer, batch_axes=baxes,
+                                   impl=impl)
+            in_sh = (
+                TrainState(params=shd.named(mesh, p_specs),
+                           opt=opt_specs),
+                shd.named(mesh, b_specs),
+            )
+            state_spec = TrainState(params=cell.params, opt=cell.opt)
+            lowered = jax.jit(
+                step, in_shardings=in_sh,
+                donate_argnums=(0,),
+            ).lower(state_spec, cell.batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, impl=impl)
+            in_sh = (shd.named(mesh, p_specs), shd.named(mesh, b_specs))
+            lowered = jax.jit(step, in_shardings=in_sh).lower(
+                cell.params, cell.batch
+            )
+        else:  # decode
+            c_specs = shd.cache_specs(cell.cache, cfg, data_axes=baxes)
+            tok_spec = shd.batch_specs(cell.batch, data_axes=baxes)["tokens"]
+            in_sh = (
+                shd.named(mesh, p_specs),
+                shd.named(mesh, c_specs),
+                NamedSharding(mesh, tok_spec),
+            )
+            lowered = jax.jit(
+                model.decode_step, in_shardings=in_sh, donate_argnums=(1,),
+            ).lower(cell.params, cell.cache, cell.batch["tokens"])
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    roof = roofline.analyze(compiled, hlo).to_dict()
+    mf = roofline.model_flops(cfg, shape)
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_gib": mem.argument_size_in_bytes / 2**30,
+            "output_gib": mem.output_size_in_bytes / 2**30,
+            "temp_gib": mem.temp_size_in_bytes / 2**30,
+            "peak_ok": (
+                mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            ) < 16 * 2**30,
+        },
+        "roofline": roof,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_ratio": (
+            (mf / n_dev) / roof["flops"] if roof["flops"] else None
+        ),
+    }
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    return result
+
+
+def _opt_specs(mesh, opt_shape, p_shape, cfg):
+    """Optimizer-state shardings: ZeRO — FSDP forced on for the moments even
+    when the params themselves replicate (the states are 4× bigger)."""
+    import dataclasses as _dc
+    from repro.optim.adamw import AdamWState
+    zcfg = _dc.replace(cfg, fsdp=True)
+    moment_specs = shd.param_specs(p_shape, zcfg)
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=shd.named(mesh, moment_specs),
+        nu=shd.named(mesh, moment_specs),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--save-hlo", type=str, default=None)
+    ap.add_argument("--opt", type=str, default="",
+                    help="comma-separated opt_<name> flags (§Perf hillclimbs)")
+    ap.add_argument("--microbatch", type=int, default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in NAME_TO_MODULE:
+            for shape in applicable_shapes(get_config(arch)):
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        try:
+            r = lower_cell(arch, shape, args.multi_pod, args.save_hlo,
+                           opts=args.opt, microbatch=args.microbatch)
+            status = "SKIP" if r.get("skipped") else "OK"
+        except Exception as e:
+            traceback.print_exc()
+            r = {"arch": arch, "shape": shape, "error": str(e)[-2000:],
+                 "multi_pod": args.multi_pod}
+            status = "FAIL"
+        results.append(r)
+        print(f"[{status}] {arch} × {shape} "
+              f"(multi_pod={args.multi_pod})", flush=True)
+        if status == "OK":
+            roof = r["roofline"]
+            print(f"    compile={r['compile_s']}s "
+                  f"mem(arg={r['memory']['argument_gib']:.2f}GiB "
+                  f"temp={r['memory']['temp_gib']:.2f}GiB) "
+                  f"compute={roof['compute_s']*1e3:.2f}ms "
+                  f"memory={roof['memory_s']*1e3:.2f}ms "
+                  f"collective={roof['collective_s']*1e3:.2f}ms "
+                  f"bottleneck={roof['bottleneck']}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if "error" in r]
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

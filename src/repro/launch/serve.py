@@ -1,0 +1,84 @@
+"""Serving driver: batched prefill + decode loop with a KV/state cache.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch gemma3-1b --reduced --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import pipeline as data_pipeline
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_host_mesh, batch_axes
+from repro.models.registry import build
+
+
+def serve(args) -> dict:
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    mesh = make_host_mesh(model_parallel=args.model_parallel)
+    shd.set_mesh_axis_sizes(mesh)
+
+    rng = np.random.default_rng(args.seed)
+    b = args.batch
+    max_len = args.prompt_len + args.gen
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(args.seed))
+        cache = model.init_cache(b, max_len)
+        decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+        prompts = rng.integers(
+            0, cfg.vocab_size, size=(b, args.prompt_len), dtype=np.int32
+        )
+        # prefill by stepping the decode cache through the prompt (keeps one
+        # compiled artifact; a chunked prefill kernel is the TPU fast path)
+        t0 = time.time()
+        logits = None
+        for i in range(args.prompt_len):
+            logits, cache = decode(params, cache, jnp.asarray(prompts[:, i:i+1]))
+        prefill_t = time.time() - t0
+
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out_tokens = [np.asarray(tok)]
+        t0 = time.time()
+        for _ in range(args.gen - 1):
+            logits, cache = decode(params, cache, tok)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            out_tokens.append(np.asarray(tok))
+        jax.block_until_ready(logits)
+        decode_t = time.time() - t0
+
+    gen = np.concatenate(out_tokens, axis=1)
+    tps = b * (args.gen - 1) / max(decode_t, 1e-9)
+    print(f"[serve] prefill {args.prompt_len} toks in {prefill_t*1e3:.0f}ms; "
+          f"decode {args.gen-1} steps @ {tps:.1f} tok/s "
+          f"(batch={b})")
+    print(f"[serve] sample generation: {gen[0][:16].tolist()}")
+    return {"tok_per_s": tps, "generated": gen}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+    serve(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every (arch × shape) cell.
+
+Nothing here allocates — params, batches, and caches are eval_shape'd.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.registry import Model, build
+from repro.optim.adamw import AdamW
+
+
+class CellSpecs(NamedTuple):
+    kind: str
+    params: Any                      # ShapeDtypeStruct pytree
+    batch: Any                       # train/prefill batch spec (or tokens)
+    cache: Any                       # decode cache spec (decode only)
+    opt: Any                         # optimizer state spec (train only)
+
+
+def params_shape(model: Model, seed: int = 0):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(seed)))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                optimizer: AdamW | None = None) -> CellSpecs:
+    model = build(cfg)
+    p_shape = params_shape(model)
+    if shape.kind == "train":
+        batch = model.train_batch_spec(shape.global_batch, shape.seq_len)
+        opt = None
+        if optimizer is not None:
+            opt = jax.eval_shape(optimizer.init, p_shape)
+        return CellSpecs("train", p_shape, batch, None, opt)
+    if shape.kind == "prefill":
+        batch = model.prefill_batch_spec(shape.global_batch, shape.seq_len)
+        return CellSpecs("prefill", p_shape, batch, None, None)
+    if shape.kind == "decode":
+        batch = model.decode_batch_spec(shape.global_batch)
+        cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)
+        )
+        return CellSpecs("decode", p_shape, batch, cache, None)
+    raise ValueError(shape.kind)

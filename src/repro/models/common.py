@@ -1,0 +1,132 @@
+"""Shared model building blocks: norms, RoPE, embeddings, initializers.
+
+Conventions (used by every arch in the zoo):
+  * parameters are nested dicts; per-layer tensors are STACKED on a leading
+    (num_layers,) axis so layers run under ``jax.lax.scan`` — this keeps HLO
+    size and compile time independent of depth (essential for the 512-way
+    dry-run compiles).
+  * compute dtype is bf16; norms, softmax, and losses run fp32.
+  * initializers take an explicit key and are only materialized for reduced
+    (smoke-test) configs and the ~100M example — full-size configs are
+    touched exclusively through ``jax.eval_shape``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cdtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def pin_batch(x, cfg):
+    """opt_batch_pin: re-assert batch-dim data sharding inside scan bodies
+    (GSPMD can drop it across scan/jvp boundaries, silently replicating the
+    batch; see EXPERIMENTS.md §Perf seamless)."""
+    if getattr(cfg, "opt_batch_pin", False):
+        from repro.launch import sharding as _shd
+        return _shd.act_constraint(x, "data", *([None] * (x.ndim - 1)))
+    return x
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,                # (..., S, H, D)
+    positions: jax.Array,        # (..., S)
+    theta: float,
+) -> jax.Array:
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activate(x: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {act}")
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    """Scaled-normal init (truncated at 3σ), σ = 1/√fan_in."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (
+        jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * std
+    ).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (
+        jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * 0.02
+    ).astype(dtype)
+
+
+def stacked(keys, fn):
+    """vmap an initializer over a leading layer axis."""
+    return jax.vmap(fn)(keys)
+
+
+def cross_entropy_loss(
+    logits: jax.Array,           # (B, S, V)
+    labels: jax.Array,           # (B, S)
+    mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -ll.mean()
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def unembed(x: jax.Array, embed: jax.Array, softcap: Optional[float] = None,
+            real_vocab: Optional[int] = None):
+    """Logits = x @ Eᵀ (fp32), optional tanh softcap.
+
+    real_vocab: when the table is padded (opt_pad_vocab), logits for the
+    padding rows are masked to -inf so CE/argmax never select them.
+    """
+    logits = jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32), embed.astype(jnp.float32)
+    )
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    if real_vocab is not None and real_vocab < embed.shape[0]:
+        pad_mask = jnp.arange(embed.shape[0]) >= real_vocab
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    return logits

@@ -1,0 +1,311 @@
+"""Mamba-2 (SSD — state-space duality) language model.
+
+Chunked SSD algorithm (Dao & Gu 2024): intra-chunk quadratic "attention-like"
+term + inter-chunk linear state recurrence, both MXU-friendly einsums; the
+inter-chunk scan carries an (H, P, N) state — this is what makes long_500k
+decode O(1) in sequence length.
+
+Block structure (simplified n_groups=1 Mamba-2):
+  in_proj → [z (gate) | x | B | C | dt] → causal depthwise conv on (x,B,C)
+  → SiLU → SSD → RMSNorm(gated) → out_proj
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common
+
+
+class MambaLayerParams(NamedTuple):
+    w_in: jax.Array               # (D, 2*Di + 2*N + H)
+    conv_w: jax.Array             # (W, Di + 2*N)  depthwise
+    conv_b: jax.Array             # (Di + 2*N,)
+    a_log: jax.Array              # (H,)
+    d_skip: jax.Array             # (H,)
+    dt_bias: jax.Array            # (H,)
+    gate_norm: jax.Array          # (Di,)
+    w_out: jax.Array              # (Di, D)
+    ln: jax.Array                 # (D,)
+
+
+class MambaParams(NamedTuple):
+    embed: jax.Array
+    layers: MambaLayerParams
+    final_norm: jax.Array
+
+
+def _dims(cfg):
+    di = cfg.ssm.expand * cfg.d_model
+    h = di // cfg.ssm.head_dim
+    return di, h, cfg.ssm.state_dim, cfg.ssm.conv_width
+
+
+def init(key, cfg) -> MambaParams:
+    d = cfg.d_model
+    di, h, n, w = _dims(cfg)
+    l = cfg.num_layers
+    dt = common.cdtype(cfg)
+    ks = jax.random.split(key, 6)
+
+    def per_layer(k, shape, in_axis=0):
+        return jax.vmap(
+            lambda kk: common.dense_init(kk, shape, in_axis, dt)
+        )(jax.random.split(k, l))
+
+    # dt bias ~ log-uniform dt init (mamba convention)
+    dt0 = np.exp(
+        np.random.RandomState(0).uniform(np.log(1e-3), np.log(1e-1), (l, h))
+    ).astype(np.float32)
+    dt_bias = np.log(np.expm1(dt0))
+    a0 = np.random.RandomState(1).uniform(1.0, 16.0, (l, h)).astype(np.float32)
+
+    layers = MambaLayerParams(
+        w_in=per_layer(ks[0], (d, 2 * di + 2 * n + h)),
+        conv_w=(
+            jax.random.normal(ks[1], (l, w, di + 2 * n), jnp.float32) * 0.1
+        ).astype(dt),
+        conv_b=jnp.zeros((l, di + 2 * n), dt),
+        a_log=jnp.asarray(np.log(a0)),
+        d_skip=jnp.ones((l, h), jnp.float32),
+        dt_bias=jnp.asarray(dt_bias),
+        gate_norm=jnp.zeros((l, di), dt),
+        w_out=per_layer(ks[2], (di, d)),
+        ln=jnp.zeros((l, d), dt),
+    )
+    return MambaParams(
+        embed=common.embed_init(ks[3], (cfg.padded_vocab_size, d), dt),
+        layers=layers,
+        final_norm=jnp.zeros((d,), dt),
+    )
+
+
+def _split_proj(xz, cfg):
+    di, h, n, _ = _dims(cfg)
+    z, x, b, c, dt = jnp.split(
+        xz, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    return z, x, b, c, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along axis 1.  x: (B, S, C), w: (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i: i + x.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    )
+    return out + b[None, None, :]
+
+
+def ssd_chunked(
+    x: jax.Array,                 # (B, S, H, P)
+    dt: jax.Array,                # (B, S, H)  (softplus'd, positive)
+    a: jax.Array,                 # (H,) negative decay rates
+    b_mat: jax.Array,             # (B, S, N)
+    c_mat: jax.Array,             # (B, S, N)
+    chunk: int,
+) -> jax.Array:
+    """Chunked SSD: returns y (B, S, H, P) for h_t = exp(a·dt_t) h_{t-1} +
+    dt_t · b_t x_tᵀ ;  y_t = c_t · h_t."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    if s % chunk != 0:
+        # pad the tail; causality keeps earlier outputs exact, padded rows
+        # are sliced away before returning
+        pad = chunk - s % chunk
+        y = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            a,
+            jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0))),
+            chunk,
+        )
+        return y[:, :s]
+    nc = s // chunk
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32)
+    cf = c_mat.astype(jnp.float32)
+
+    # reshape into chunks
+    xc = xf.reshape(bsz, nc, chunk, h, p)
+    dtc = dtf.reshape(bsz, nc, chunk, h)
+    bc = bf.reshape(bsz, nc, chunk, n)
+    cc = cf.reshape(bsz, nc, chunk, n)
+
+    la = dtc * a[None, None, None, :]                    # log-decay per step
+    cum = jnp.cumsum(la, axis=2)                         # (B,nc,Q,H)
+
+    # ---- intra-chunk (quadratic within chunk; MXU einsums) ----
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    iq = jnp.arange(chunk)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    l_mat = jnp.where(causal, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)           # (B,nc,Q,Q)
+    w_ij = cb[..., None] * l_mat * dtc[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ij, xc)
+
+    # ---- chunk states: S_c = Σ_j exp(cum_Q - cum_j) dt_j b_j x_jᵀ ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,Q,H)
+    sb = bc[:, :, :, None, :] * (decay_to_end * dtc)[..., None]  # (B,nc,Q,H,N)
+    s_chunk = jnp.einsum("bcqhn,bcqhp->bchnp", sb, xc)   # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence over chunk states ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        s_c, g = inp                                     # (B,H,N,P), (B,H)
+        new = carry * g[..., None, None] + s_c
+        return new, carry                                # emit state BEFORE
+
+    init_state = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_fn,
+        init_state,
+        (
+            jnp.moveaxis(s_chunk, 1, 0),                 # (nc,B,H,N,P)
+            jnp.moveaxis(chunk_decay, 1, 0),             # (nc,B,H)
+        ),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (B,nc,H,N,P)
+
+    # ---- inter-chunk output: y_inter_i = exp(cum_i) c_i · R_{c-1} ----
+    c_decay = jnp.exp(cum)                               # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bcqn,bchnp->bcqhp", cc, prev_states
+    ) * c_decay[..., None]
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y
+
+
+def _mamba_mixer(x, lp: MambaLayerParams, cfg):
+    di, h, n, _ = _dims(cfg)
+    p = cfg.ssm.head_dim
+    xz = jnp.einsum("bsd,de->bse", x, lp.w_in)
+    z, xi, b, c, dt = _split_proj(xz, cfg)
+    conv_in = jnp.concatenate([xi, b, c], axis=-1)
+    conv_out = jax.nn.silu(
+        _causal_conv(conv_in, lp.conv_w, lp.conv_b).astype(jnp.float32)
+    )
+    xi, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+    dtp = jax.nn.softplus(
+        dt.astype(jnp.float32) + lp.dt_bias[None, None, :]
+    )
+    a = -jnp.exp(lp.a_log)
+    xh = xi.reshape(*xi.shape[:2], h, p)
+    y = ssd_chunked(xh, dtp, a, b, c, cfg.ssm.chunk)
+    y = y + lp.d_skip[None, None, :, None] * xh
+    y = y.reshape(*x.shape[:2], di)
+    y = common.rms_norm(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+        lp.gate_norm, cfg.norm_eps,
+    )
+    return jnp.einsum("bse,ed->bsd", y, lp.w_out)
+
+
+def forward(params: MambaParams, tokens, cfg, impl: str = "xla"):
+    x = params.embed[tokens].astype(common.cdtype(cfg))
+
+    def body(hcarry, lp):
+        def blk(hh, lp):
+            hh = common.pin_batch(hh, cfg)
+            h2 = common.rms_norm(hh, lp.ln, cfg.norm_eps)
+            return (hh + _mamba_mixer(h2, lp, cfg)).astype(hh.dtype)
+        fn = jax.checkpoint(blk) if cfg.remat else blk
+        return fn(hcarry, lp), None
+
+    x, _ = jax.lax.scan(body, x, params.layers)
+    return common.rms_norm(x, params.final_norm, cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg, impl: str = "xla"):
+    hidden = forward(params, batch["tokens"], cfg, impl=impl)
+    logits = common.unembed(hidden, params.embed, cfg.logit_softcap, real_vocab=cfg.vocab_size)
+    loss = common.cross_entropy_loss(
+        logits, batch["labels"], batch.get("mask")
+    )
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) state per layer
+# ---------------------------------------------------------------------------
+
+class MambaCache(NamedTuple):
+    ssm_state: jax.Array          # (L, B, H, N, P) fp32
+    conv_state: jax.Array         # (L, B, W-1, Di + 2N)
+    pos: jax.Array
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    di, h, n, w = _dims(cfg)
+    p = cfg.ssm.head_dim
+    l = cfg.num_layers
+    return MambaCache(
+        ssm_state=jnp.zeros((l, batch, h, n, p), jnp.float32),
+        conv_state=jnp.zeros((l, batch, w - 1, di + 2 * n), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_step(params: MambaParams, cache: MambaCache, tokens, cfg):
+    di, h, n, w = _dims(cfg)
+    p = cfg.ssm.head_dim
+    x = params.embed[tokens].astype(common.cdtype(cfg))   # (B, 1, D)
+
+    def body(hcarry, scanned):
+        lp, s_state, c_state = scanned
+        hh = common.rms_norm(hcarry, lp.ln, cfg.norm_eps)
+        xz = jnp.einsum("bsd,de->bse", hh, lp.w_in)
+        z, xi, b, c, dt = _split_proj(xz, cfg)
+        conv_in = jnp.concatenate([xi, b, c], axis=-1)    # (B, 1, C)
+        hist = jnp.concatenate([c_state, conv_in], axis=1)  # (B, W, C)
+        conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                          lp.conv_w.astype(jnp.float32)) + lp.conv_b
+        conv = jax.nn.silu(conv)                          # (B, C)
+        xi1, b1, c1 = jnp.split(conv, [di, di + n], axis=-1)
+        dtp = jax.nn.softplus(
+            dt[:, 0].astype(jnp.float32) + lp.dt_bias[None, :]
+        )                                                 # (B, H)
+        a = -jnp.exp(lp.a_log)                            # (H,)
+        g = jnp.exp(dtp * a[None, :])                     # (B, H)
+        xh = xi1.reshape(-1, h, p).astype(jnp.float32)
+        # state update: s ← g s + dt · b x^T
+        outer = jnp.einsum("bn,bhp->bhnp", b1, xh) * dtp[..., None, None]
+        s_new = s_state * g[..., None, None] + outer
+        y = jnp.einsum("bn,bhnp->bhp", c1, s_new)
+        y = y + lp.d_skip[None, :, None] * xh
+        y = y.reshape(-1, 1, di)
+        y = common.rms_norm(
+            (y * jax.nn.silu(z.astype(jnp.float32))).astype(hcarry.dtype),
+            lp.gate_norm, cfg.norm_eps,
+        )
+        out = hcarry + jnp.einsum("bse,ed->bsd", y, lp.w_out)
+        return out.astype(hcarry.dtype), (s_new, hist[:, 1:, :])
+
+    x, (s_all, c_all) = jax.lax.scan(
+        body, x, (params.layers, cache.ssm_state, cache.conv_state)
+    )
+    hidden = common.rms_norm(x, params.final_norm, cfg.norm_eps)
+    logits = common.unembed(hidden, params.embed, cfg.logit_softcap, real_vocab=cfg.vocab_size)
+    return logits[:, 0, :], MambaCache(
+        ssm_state=s_all, conv_state=c_all.astype(cache.conv_state.dtype),
+        pos=cache.pos + 1,
+    )
+
+
+def prefill(params, tokens, cfg, impl: str = "xla"):
+    hidden = forward(params, tokens, cfg, impl=impl)
+    logits = common.unembed(hidden[:, -1:, :], params.embed, cfg.logit_softcap, real_vocab=cfg.vocab_size)
+    return logits[:, 0, :]

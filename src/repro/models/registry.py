@@ -1,0 +1,187 @@
+"""Unified Model API over the 10-arch zoo.
+
+``build(cfg)`` returns a ``Model`` with a uniform surface:
+  init(key) -> params
+  loss_fn(params, batch) -> (loss, metrics)          [train shapes]
+  prefill(params, batch) -> last-token logits        [prefill shapes]
+  init_cache(batch, max_len) -> cache
+  decode_step(params, cache, tokens) -> (logits, cache)   [decode shapes]
+  train_batch_spec / prefill_batch_spec / decode_batch_spec — ShapeDtypeStructs
+    for the dry-run (frontend stubs appear here as precomputed embeddings).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import rglru as rglru_mod
+from repro.models import transformer as tfm
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    init_cache: Callable
+    decode_step: Callable
+    train_batch_spec: Callable
+    prefill_batch_spec: Callable
+    decode_batch_spec: Callable
+
+
+def _tok_spec(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def _lm_specs(cfg):
+    def train(b, s):
+        return {"tokens": _tok_spec(b, s), "labels": _tok_spec(b, s)}
+
+    def prefill(b, s):
+        return {"tokens": _tok_spec(b, s)}
+
+    def decode(b):
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    return train, prefill, decode
+
+
+def _build_transformer(cfg: ModelConfig) -> Model:
+    train_spec, prefill_spec, decode_spec = _lm_specs(cfg)
+
+    def loss(params, batch, impl="xla"):
+        return tfm.loss_fn(params, batch, cfg, impl=impl)
+
+    def prefill(params, batch, impl="xla"):
+        return tfm.prefill(
+            params, batch["tokens"], cfg,
+            prefix_embeds=batch.get("prefix_embeds"), impl=impl,
+        )
+
+    return Model(
+        cfg=cfg,
+        init=functools.partial(tfm.init, cfg=cfg),
+        loss_fn=loss,
+        prefill=prefill,
+        init_cache=functools.partial(tfm.init_cache, cfg),
+        decode_step=lambda p, c, t: tfm.decode_step(p, c, t, cfg),
+        train_batch_spec=train_spec,
+        prefill_batch_spec=prefill_spec,
+        decode_batch_spec=decode_spec,
+    )
+
+
+def _build_vlm(cfg: ModelConfig) -> Model:
+    """Pixtral backbone: decoder LM consuming [patch embeds | tokens]."""
+    base = _build_transformer(cfg)
+    p = cfg.frontend_len
+    d = cfg.d_model
+
+    def train_spec(b, s):
+        # text length shrinks so total backbone sequence stays s
+        return {
+            "tokens": _tok_spec(b, s - p),
+            "labels": _tok_spec(b, s - p),
+            "prefix_embeds": jax.ShapeDtypeStruct((b, p, d), jnp.bfloat16),
+        }
+
+    def prefill_spec(b, s):
+        return {
+            "tokens": _tok_spec(b, s - p),
+            "prefix_embeds": jax.ShapeDtypeStruct((b, p, d), jnp.bfloat16),
+        }
+
+    base.train_batch_spec = train_spec
+    base.prefill_batch_spec = prefill_spec
+    return base
+
+
+def _build_mamba(cfg: ModelConfig) -> Model:
+    train_spec, prefill_spec, decode_spec = _lm_specs(cfg)
+    return Model(
+        cfg=cfg,
+        init=functools.partial(mamba_mod.init, cfg=cfg),
+        loss_fn=lambda p, b, impl="xla": mamba_mod.loss_fn(p, b, cfg, impl=impl),
+        prefill=lambda p, b, impl="xla": mamba_mod.prefill(
+            p, b["tokens"], cfg, impl=impl
+        ),
+        init_cache=functools.partial(mamba_mod.init_cache, cfg),
+        decode_step=lambda p, c, t: mamba_mod.decode_step(p, c, t, cfg),
+        train_batch_spec=train_spec,
+        prefill_batch_spec=prefill_spec,
+        decode_batch_spec=decode_spec,
+    )
+
+
+def _build_griffin(cfg: ModelConfig) -> Model:
+    train_spec, prefill_spec, decode_spec = _lm_specs(cfg)
+    return Model(
+        cfg=cfg,
+        init=functools.partial(rglru_mod.init, cfg=cfg),
+        loss_fn=lambda p, b, impl="xla": rglru_mod.loss_fn(p, b, cfg, impl=impl),
+        prefill=lambda p, b, impl="xla": rglru_mod.prefill(
+            p, b["tokens"], cfg, impl=impl
+        ),
+        init_cache=functools.partial(rglru_mod.init_cache, cfg),
+        decode_step=lambda p, c, t: rglru_mod.decode_step(p, c, t, cfg),
+        train_batch_spec=train_spec,
+        prefill_batch_spec=prefill_spec,
+        decode_batch_spec=decode_spec,
+    )
+
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    d = cfg.d_model
+    se = cfg.frontend_len
+
+    def train_spec(b, s):
+        return {
+            "tokens": _tok_spec(b, s),
+            "labels": _tok_spec(b, s),
+            "frames": jax.ShapeDtypeStruct((b, se, d), jnp.bfloat16),
+        }
+
+    def prefill_spec(b, s):
+        return {
+            "tokens": _tok_spec(b, s),
+            "frames": jax.ShapeDtypeStruct((b, se, d), jnp.bfloat16),
+        }
+
+    def decode_spec(b):
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    return Model(
+        cfg=cfg,
+        init=functools.partial(encdec_mod.init, cfg=cfg),
+        loss_fn=lambda p, b, impl="xla": encdec_mod.loss_fn(p, b, cfg, impl=impl),
+        prefill=lambda p, b, impl="xla": encdec_mod.prefill(p, b, cfg, impl=impl),
+        init_cache=functools.partial(encdec_mod.init_cache, cfg),
+        decode_step=lambda p, c, t: encdec_mod.decode_step(p, c, t, cfg),
+        train_batch_spec=train_spec,
+        prefill_batch_spec=prefill_spec,
+        decode_batch_spec=decode_spec,
+    )
+
+
+_BUILDERS = {
+    "dense": _build_transformer,
+    "moe": _build_transformer,
+    "ssm": _build_mamba,
+    "hybrid": _build_griffin,
+    "encdec": _build_encdec,
+    "vlm": _build_vlm,
+}
+
+
+def build(cfg: ModelConfig) -> Model:
+    return _BUILDERS[cfg.family](cfg)

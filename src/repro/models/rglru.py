@@ -1,0 +1,367 @@
+"""RecurrentGemma (Griffin): RG-LRU recurrent blocks + local MQA attention,
+pattern (rglru, rglru, attn).
+
+The 26-layer stack is scanned as 8 × the 3-layer pattern plus 2 trailing
+rglru layers (DESIGN.md §6) — keeping HLO size depth-independent while
+honoring the 1-attention : 2-recurrent ratio.
+
+RG-LRU recurrence (per channel, fp32):
+    r_t = σ(W_rg x_t + b_rg)           recurrence gate
+    i_t = σ(W_ig x_t + b_ig)           input gate
+    log a_t = -c · softplus(Λ) · r_t   (c = 8)
+    h_t = a_t · h_{t-1} + √(1 − a_t²) · (i_t · x_t)
+computed with an associative scan over the sequence — and as a single
+multiply-add per step at decode time (the O(1)-state property that makes
+long_500k applicable to this arch).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn
+from repro.models import common
+from repro.models import mlp as mlp_mod
+
+RG_C = 8.0
+
+
+class RGLRULayerParams(NamedTuple):
+    ln1: jax.Array                # (D,)
+    w_x: jax.Array                # (D, R) main branch
+    w_gate: jax.Array             # (D, R) multiplicative branch
+    conv_w: jax.Array             # (W, R)
+    conv_b: jax.Array             # (R,)
+    lam: jax.Array                # (R,) Λ
+    w_rg: jax.Array               # (R, R)
+    b_rg: jax.Array               # (R,)
+    w_ig: jax.Array               # (R, R)
+    b_ig: jax.Array               # (R,)
+    w_out: jax.Array              # (R, D)
+    ln2: jax.Array                # (D,)
+    mlp: mlp_mod.MLPParams
+
+
+class AttnLayerParams(NamedTuple):
+    ln1: jax.Array
+    attn: attn.AttnParams
+    ln2: jax.Array
+    mlp: mlp_mod.MLPParams
+
+
+class TripleParams(NamedTuple):
+    r1: RGLRULayerParams
+    r2: RGLRULayerParams
+    at: AttnLayerParams
+
+
+class GriffinParams(NamedTuple):
+    embed: jax.Array
+    triples: TripleParams         # stacked (n_triples, ...)
+    tail: Optional[RGLRULayerParams]  # stacked (n_tail, ...)
+    final_norm: jax.Array
+
+
+CONV_W = 4
+
+
+def _r(cfg) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def _init_rglru(key, cfg, layers: int) -> RGLRULayerParams:
+    d, r = cfg.d_model, _r(cfg)
+    dt = common.cdtype(cfg)
+    ks = jax.random.split(key, 6)
+
+    def mk(k, shape, in_axis=0):
+        return jax.vmap(
+            lambda kk: common.dense_init(kk, shape, in_axis, dt)
+        )(jax.random.split(k, layers))
+
+    # Λ init so a^c spans ~(0.9, 0.999)
+    lam0 = np.random.RandomState(7).uniform(0.3, 1.5, (layers, r))
+    return RGLRULayerParams(
+        ln1=jnp.zeros((layers, d), dt),
+        w_x=mk(ks[0], (d, r)),
+        w_gate=mk(ks[1], (d, r)),
+        conv_w=(jax.random.normal(ks[2], (layers, CONV_W, r)) * 0.1).astype(dt),
+        conv_b=jnp.zeros((layers, r), dt),
+        lam=jnp.asarray(lam0, jnp.float32),
+        w_rg=mk(ks[3], (r, r)),
+        b_rg=jnp.zeros((layers, r), dt),
+        w_ig=mk(ks[4], (r, r)),
+        b_ig=jnp.zeros((layers, r), dt),
+        w_out=mk(ks[5], (r, d)),
+        ln2=jnp.zeros((layers, d), dt),
+        mlp=mlp_mod.init_mlp(ks[5], cfg, layers=layers),
+    )
+
+
+def _init_attn_layer(key, cfg, layers: int) -> AttnLayerParams:
+    dt = common.cdtype(cfg)
+    ks = jax.random.split(key, 2)
+    return AttnLayerParams(
+        ln1=jnp.zeros((layers, cfg.d_model), dt),
+        attn=attn.init_attn(ks[0], cfg, layers=layers),
+        ln2=jnp.zeros((layers, cfg.d_model), dt),
+        mlp=mlp_mod.init_mlp(ks[1], cfg, layers=layers),
+    )
+
+
+def plan(cfg) -> Tuple[int, int]:
+    """(n_triples, n_tail_rglru) for the layer budget."""
+    n_triples = cfg.num_layers // 3
+    n_tail = cfg.num_layers - 3 * n_triples
+    return n_triples, n_tail
+
+
+def init(key, cfg) -> GriffinParams:
+    n_triples, n_tail = plan(cfg)
+    ks = jax.random.split(key, 5)
+    triples = TripleParams(
+        r1=_init_rglru(ks[0], cfg, n_triples),
+        r2=_init_rglru(ks[1], cfg, n_triples),
+        at=_init_attn_layer(ks[2], cfg, n_triples),
+    )
+    tail = _init_rglru(ks[3], cfg, n_tail) if n_tail else None
+    return GriffinParams(
+        embed=common.embed_init(
+            ks[4], (cfg.padded_vocab_size, cfg.d_model), common.cdtype(cfg)
+        ),
+        triples=triples,
+        tail=tail,
+        final_norm=jnp.zeros((cfg.d_model,), common.cdtype(cfg)),
+    )
+
+
+def rg_lru_scan(x: jax.Array, gates_r, gates_i, lam) -> jax.Array:
+    """x, gates: (B, S, R) fp32.  Associative linear recurrence."""
+    log_a = -RG_C * jax.nn.softplus(lam)[None, None, :] * gates_r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (gates_i * x)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _rglru_block(x, lp: RGLRULayerParams, cfg):
+    h = common.rms_norm(x, lp.ln1, cfg.norm_eps)
+    main = jnp.einsum("bsd,dr->bsr", h, lp.w_x)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dr->bsr", h, lp.w_gate).astype(jnp.float32)
+    )
+    conv = _conv1d(main, lp.conv_w, lp.conv_b).astype(jnp.float32)
+    gr = jax.nn.sigmoid(
+        jnp.einsum("bsr,rq->bsq", conv, lp.w_rg.astype(jnp.float32))
+        + lp.b_rg.astype(jnp.float32)
+    )
+    gi = jax.nn.sigmoid(
+        jnp.einsum("bsr,rq->bsq", conv, lp.w_ig.astype(jnp.float32))
+        + lp.b_ig.astype(jnp.float32)
+    )
+    hseq = rg_lru_scan(conv, gr, gi, lp.lam)
+    y = (hseq * gate).astype(x.dtype)
+    x = x + jnp.einsum("bsr,rd->bsd", y, lp.w_out)
+    h = common.rms_norm(x, lp.ln2, cfg.norm_eps)
+    return (x + mlp_mod.mlp_apply(h, lp.mlp, cfg.act)).astype(x.dtype)
+
+
+def _conv1d(x, w, b):
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    return sum(
+        xp[:, i: i + x.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    ) + b[None, None, :]
+
+
+def _attn_block(x, lp: AttnLayerParams, cfg, positions, impl):
+    h = common.rms_norm(x, lp.ln1, cfg.norm_eps)
+    q, k, v = attn.qkv_project(h, lp.attn, cfg, positions)
+    o = attn.causal_attend(
+        q, k, v, cfg, window=cfg.hybrid.window, impl=impl
+    )
+    x = x + jnp.einsum("bshk,hkd->bsd", o, lp.attn.wo)
+    h = common.rms_norm(x, lp.ln2, cfg.norm_eps)
+    return (x + mlp_mod.mlp_apply(h, lp.mlp, cfg.act)).astype(x.dtype)
+
+
+def forward(params: GriffinParams, tokens, cfg, impl: str = "xla"):
+    x = params.embed[tokens].astype(common.cdtype(cfg))
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def triple(h, tp: TripleParams):
+        def blk(hh, tp):
+            hh = common.pin_batch(hh, cfg)
+            hh = _rglru_block(hh, tp.r1, cfg)
+            hh = _rglru_block(hh, tp.r2, cfg)
+            return _attn_block(hh, tp.at, cfg, positions, impl)
+        fn = jax.checkpoint(blk) if cfg.remat else blk
+        return fn(h, tp), None
+
+    x, _ = jax.lax.scan(triple, x, params.triples)
+    if params.tail is not None:
+        def tail_blk(h, lp):
+            fn = jax.checkpoint(
+                lambda hh, lp: _rglru_block(hh, lp, cfg)
+            ) if cfg.remat else (lambda hh, lp: _rglru_block(hh, lp, cfg))
+            return fn(h, lp), None
+        x, _ = jax.lax.scan(tail_blk, x, params.tail)
+    return common.rms_norm(x, params.final_norm, cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg, impl: str = "xla"):
+    hidden = forward(params, batch["tokens"], cfg, impl=impl)
+    logits = common.unembed(hidden, params.embed, cfg.logit_softcap, real_vocab=cfg.vocab_size)
+    loss = common.cross_entropy_loss(
+        logits, batch["labels"], batch.get("mask")
+    )
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) recurrent state + ring-buffer window cache
+# ---------------------------------------------------------------------------
+
+class GriffinCache(NamedTuple):
+    # recurrent state per rglru layer
+    h1: jax.Array                 # (n_triples, B, R) fp32
+    h2: jax.Array
+    ht: jax.Array                 # (n_tail, B, R)
+    conv1: jax.Array              # (n_triples, B, W-1, R)
+    conv2: jax.Array
+    convt: jax.Array
+    # ring KV cache for attention layers (window-sized!)
+    k: jax.Array                  # (n_triples, B, window, Hkv, Dh)
+    v: jax.Array
+    pos: jax.Array
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    nt, ntail = plan(cfg)
+    r = _r(cfg)
+    win = min(cfg.hybrid.window, max_len)
+    kvshape = (nt, batch, win, cfg.num_kv_heads, cfg.resolved_head_dim)
+    return GriffinCache(
+        h1=jnp.zeros((nt, batch, r), jnp.float32),
+        h2=jnp.zeros((nt, batch, r), jnp.float32),
+        ht=jnp.zeros((max(ntail, 1), batch, r), jnp.float32),
+        conv1=jnp.zeros((nt, batch, CONV_W - 1, r), dtype),
+        conv2=jnp.zeros((nt, batch, CONV_W - 1, r), dtype),
+        convt=jnp.zeros((max(ntail, 1), batch, CONV_W - 1, r), dtype),
+        k=jnp.zeros(kvshape, dtype),
+        v=jnp.zeros(kvshape, dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _rglru_step(x, lp: RGLRULayerParams, cfg, h_state, conv_state):
+    """x: (B, 1, D).  Returns (out, h_state', conv_state')."""
+    h = common.rms_norm(x, lp.ln1, cfg.norm_eps)
+    main = jnp.einsum("bsd,dr->bsr", h, lp.w_x)[:, 0]      # (B, R)
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dr->bsr", h, lp.w_gate)[:, 0].astype(jnp.float32)
+    )
+    hist = jnp.concatenate(
+        [conv_state, main[:, None, :].astype(conv_state.dtype)], axis=1
+    )                                                      # (B, W, R)
+    conv = jnp.einsum(
+        "bwr,wr->br", hist.astype(jnp.float32), lp.conv_w.astype(jnp.float32)
+    ) + lp.conv_b.astype(jnp.float32)
+    gr = jax.nn.sigmoid(conv @ lp.w_rg.astype(jnp.float32)
+                        + lp.b_rg.astype(jnp.float32))
+    gi = jax.nn.sigmoid(conv @ lp.w_ig.astype(jnp.float32)
+                        + lp.b_ig.astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(lp.lam)[None, :] * gr
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h_new = a * h_state + beta * (gi * conv)
+    y = (h_new * gate).astype(x.dtype)[:, None, :]
+    x = x + jnp.einsum("bsr,rd->bsd", y, lp.w_out)
+    hn = common.rms_norm(x, lp.ln2, cfg.norm_eps)
+    out = (x + mlp_mod.mlp_apply(hn, lp.mlp, cfg.act)).astype(x.dtype)
+    return out, h_new, hist[:, 1:, :]
+
+
+def _attn_step(x, lp: AttnLayerParams, cfg, k_c, v_c, pos):
+    """Ring-buffer windowed MQA decode step."""
+    win = k_c.shape[1]
+    h = common.rms_norm(x, lp.ln1, cfg.norm_eps)
+    positions = jnp.broadcast_to(pos[None, None], (x.shape[0], 1))
+    q, k_new, v_new = attn.qkv_project(h, lp.attn, cfg, positions)
+    slot = jnp.mod(pos, win)
+    k_c = jax.lax.dynamic_update_slice_in_dim(
+        k_c, k_new.astype(k_c.dtype), slot, axis=1
+    )
+    v_c = jax.lax.dynamic_update_slice_in_dim(
+        v_c, v_new.astype(v_c.dtype), slot, axis=1
+    )
+    # ring validity: slots hold positions (pos-win, pos]; all valid once full
+    slots = jnp.arange(win)
+    age = jnp.mod(slot - slots, win)                       # 0 = newest
+    valid = age <= jnp.minimum(pos, win - 1)
+    scores = attn._gqa_scores(q, k_c) * (q.shape[-1] ** -0.5)
+    scores = jnp.where(valid[None, None, None, None, :], scores, attn.NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = attn._gqa_out(p, v_c).astype(x.dtype)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, lp.attn.wo)
+    hn = common.rms_norm(x, lp.ln2, cfg.norm_eps)
+    out = (x + mlp_mod.mlp_apply(hn, lp.mlp, cfg.act)).astype(x.dtype)
+    return out, k_c, v_c
+
+
+def decode_step(params: GriffinParams, cache: GriffinCache, tokens, cfg):
+    x = params.embed[tokens].astype(common.cdtype(cfg))
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    pos = cache.pos
+
+    def triple(h, scanned):
+        tp, h1, h2, c1, c2, k_c, v_c = scanned
+        h, h1n, c1n = _rglru_step(h, tp.r1, cfg, h1, c1)
+        h, h2n, c2n = _rglru_step(h, tp.r2, cfg, h2, c2)
+        h, k_cn, v_cn = _attn_step(h, tp.at, cfg, k_c, v_c, pos)
+        return h, (h1n, h2n, c1n, c2n, k_cn, v_cn)
+
+    x, (h1, h2, c1, c2, k_all, v_all) = jax.lax.scan(
+        triple, x,
+        (params.triples, cache.h1, cache.h2, cache.conv1, cache.conv2,
+         cache.k, cache.v),
+    )
+    ht, ct = cache.ht, cache.convt
+    if params.tail is not None:
+        def tail_fn(h, scanned):
+            lp, hs, cs = scanned
+            h, hn, cn = _rglru_step(h, lp, cfg, hs, cs)
+            return h, (hn, cn)
+        x, (ht, ct) = jax.lax.scan(
+            tail_fn, x, (params.tail, cache.ht, cache.convt)
+        )
+    hidden = common.rms_norm(x, params.final_norm, cfg.norm_eps)
+    logits = common.unembed(hidden, params.embed, cfg.logit_softcap, real_vocab=cfg.vocab_size)
+    return logits[:, 0, :], GriffinCache(
+        h1=h1, h2=h2, ht=ht,
+        conv1=c1.astype(cache.conv1.dtype),
+        conv2=c2.astype(cache.conv2.dtype),
+        convt=ct.astype(cache.convt.dtype),
+        k=k_all, v=v_all, pos=pos + 1,
+    )
+
+
+def prefill(params, tokens, cfg, impl: str = "xla"):
+    hidden = forward(params, tokens, cfg, impl=impl)
+    logits = common.unembed(hidden[:, -1:, :], params.embed, cfg.logit_softcap, real_vocab=cfg.vocab_size)
+    return logits[:, 0, :]

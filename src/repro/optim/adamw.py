@@ -1,0 +1,111 @@
+"""AdamW + gradient clipping + schedules — self-contained (no optax).
+
+States are fp32 and sharded like the parameters (with FSDP forced on for
+states even when params replicate — ZeRO-1 semantics; see
+launch/sharding.opt variant).  The optimizer exposes the standard
+(init, update) pair plus a ``state_specs`` helper for pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any                        # first moment (params-shaped, fp32)
+    nu: Any                        # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        def zeros():
+            return jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=zeros(),
+            nu=zeros(),   # distinct buffers (donation requires no aliasing)
+        )
+
+    def lr_at(self, step) -> jax.Array:
+        if callable(self.learning_rate):
+            return jnp.asarray(self.learning_rate(step), jnp.float32)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(
+        self, grads, state: AdamWState, params
+    ) -> Tuple[Any, AdamWState]:
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm is not None:
+            gnorm = global_norm(g32)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+        nu = jax.tree.map(
+            lambda n, g: b2 * n + (1 - b2) * g * g, state.nu, g32
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self.lr_at(step)
+
+        def upd(p, m, n):
+            mh = m / bc1
+            nh = n / bc2
+            u = mh / (jnp.sqrt(nh) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, mu, nu)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(
+    peak: float, warmup_steps: int, total_steps: int, floor: float = 0.1
+) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1
+        )
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def linear_warmup(peak: float, warmup_steps: int) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        return peak * jnp.minimum(1.0, step / max(warmup_steps, 1))
+    return fn

@@ -1,0 +1,210 @@
+"""Roofline extraction from a compiled dry-run artifact.
+
+Conventions (documented per DESIGN.md §7):
+  * ``compiled.cost_analysis()`` on a GSPMD-partitioned module reports the
+    PER-DEVICE program: flops/bytes are per chip per step.
+  * Collective bytes are parsed from the partitioned HLO text: for every
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute we take the RESULT shape (per-device) and apply a
+    ring-transfer multiplier:
+        all-reduce      2× result        (reduce-scatter + all-gather)
+        all-gather      1× result        ((n-1)/n ≈ 1 of the gathered out)
+        reduce-scatter  group_size× result ≈ 1× input
+        all-to-all      1× result
+        collective-permute 1× result
+  * Terms (seconds, per step, per chip):
+        compute    = flops / PEAK_FLOPS_BF16
+        memory     = hbm_bytes / HBM_BW
+        collective = ici_bytes / (ICI_LINKS × ICI_BW) + dci_bytes / DCI_BW
+    Collectives whose replica group spans more than one pod (group crosses a
+    256-device boundary) are charged to the DCI link.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import Counter
+from typing import Dict, Optional, Tuple
+
+from repro.launch import mesh as mesh_mod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _pod_size() -> int:
+    from repro.roofline import hlo_walk
+    return hlo_walk.POD_SIZE
+
+
+def _group_info(line: str) -> Tuple[int, bool]:
+    """(group_size, crosses_pod_boundary) for a collective HLO line.
+
+    Delegates to the exact iota-group materializer in ``hlo_walk``."""
+    from repro.roofline import hlo_walk
+    m = hlo_walk._GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2)), hlo_walk._iota_crosses(m)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        pod = _pod_size()
+        ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        crosses = (max(ids) // pod) != (min(ids) // pod) if ids else False
+        return max(len(ids), 1), crosses
+    return 1, False
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective traffic by class, plus op counts."""
+    out = {"ici_bytes": 0.0, "dci_bytes": 0.0}
+    counts: Counter = Counter()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(result_type)
+        gsize, crosses = _group_info(line)
+        if op == "all-reduce":
+            moved = 2.0 * nbytes
+        elif op == "reduce-scatter":
+            moved = float(nbytes) * max(gsize - 1, 1)
+        else:
+            moved = float(nbytes)
+        counts[op] += 1
+        key = "dci_bytes" if crosses else "ici_bytes"
+        out[key] += moved
+    out["op_counts"] = dict(counts)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                   # per device per step
+    hbm_bytes: float
+    ici_bytes: float
+    dci_bytes: float
+    op_counts: Dict[str, int]
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    xla_cost_analysis_flops: float = 0.0   # raw (loop bodies counted once)
+    xla_cost_analysis_bytes: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.flops / mesh_mod.PEAK_FLOPS_BF16
+        self.memory_s = self.hbm_bytes / mesh_mod.HBM_BW
+        self.collective_s = (
+            self.ici_bytes / (mesh_mod.ICI_LINKS * mesh_mod.ICI_BW_PER_LINK)
+            + self.dci_bytes / mesh_mod.DCI_BW
+        )
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        self.bottleneck = max(terms, key=terms.get)
+        return self
+
+    @property
+    def step_time_s(self) -> float:
+        """Simple max-of-terms model (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def compute_fraction(self) -> float:
+        """Fraction of the step the MXU would be busy = roofline fraction."""
+        t = self.step_time_s
+        return self.compute_s / t if t > 0 else 0.0
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, hlo_text: Optional[str] = None) -> Roofline:
+    """Primary path: the trip-count-aware HLO walker (hlo_walk.py) —
+    ``cost_analysis()`` counts while bodies once, which undercounts every
+    scanned program; raw cost_analysis numbers are preserved for reference."""
+    from repro.roofline import hlo_walk
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):       # older jax returns [dict]
+        ca = ca[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    w = hlo_walk.walk(text)
+    r = Roofline(
+        flops=w.flops,
+        hbm_bytes=w.hbm_bytes,
+        ici_bytes=w.ici_bytes,
+        dci_bytes=w.dci_bytes,
+        op_counts={k: int(v) for k, v in w.op_counts.items()},
+    ).finalize()
+    r.xla_cost_analysis_flops = float(ca.get("flops", 0.0))
+    r.xla_cost_analysis_bytes = float(ca.get("bytes accessed", 0.0))
+    return r
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D prefill forward, 2·N per decode token
+    (N = active params excl. embeddings; D = tokens processed)."""
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * shape.global_batch      # one token per sequence
+
+
+def active_params(cfg) -> float:
+    """Per-token active parameter count (MoE counts top-k experts only)."""
+    d = cfg.d_model
+    if cfg.family == "ssm":
+        di = cfg.ssm.expand * d
+        n_layer = d * (2 * di + 2 * cfg.ssm.state_dim
+                       + di // cfg.ssm.head_dim) + di * d
+        return cfg.num_layers * n_layer
+    dh = cfg.resolved_head_dim
+    attn_p = d * dh * (cfg.num_heads + 2 * cfg.num_kv_heads) \
+        + cfg.num_heads * dh * d
+    if cfg.moe:
+        ffn = 3 * d * cfg.moe.d_ff * cfg.moe.num_experts_per_tok \
+            + d * cfg.moe.num_experts
+    else:
+        ffn = 3 * d * cfg.d_ff
+    layers = cfg.num_layers * (attn_p + ffn)
+    if cfg.family == "hybrid":
+        r = cfg.hybrid.lru_width or d
+        n_tr = cfg.num_layers // 3
+        rec_p = 2 * d * r + 2 * r * r + r * d + 3 * d * cfg.d_ff
+        att_p = attn_p + 3 * d * cfg.d_ff
+        layers = n_tr * (2 * rec_p + att_p) + (cfg.num_layers - 3 * n_tr) * rec_p
+    if cfg.family == "encdec":
+        layers = layers + cfg.enc_layers * (attn_p + 3 * d * cfg.d_ff) \
+            + cfg.num_layers * attn_p       # cross-attention
+    return float(layers)

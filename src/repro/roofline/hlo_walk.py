@@ -1,0 +1,406 @@
+"""Trip-count-aware HLO cost walker.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so any
+scanned program (layer scans, microbatch accumulation, attention chunking —
+i.e. everything this framework lowers) is undercounted by the loop trip
+counts.  This walker parses the optimized HLO text and computes:
+
+  * flops        — 2·prod(result)·prod(contracting dims) per ``dot``,
+                   scaled by the product of enclosing loop trip counts;
+  * hbm_bytes    — a fusion-boundary traffic model (see _instr_bytes):
+                   materialized buffers are read/written once per execution;
+                   sliced reads charge the slice, reductions charge their
+                   full inputs;
+  * collectives  — per-op moved bytes (ring-transfer multipliers) × trip
+                   counts, split ICI vs cross-pod DCI by replica-group span.
+
+The model is a roofline estimate, not a simulator: its job is to rank terms
+and expose deltas under optimization, with each convention documented.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\("
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR_RE = re.compile(
+    r"(calls|body|condition|to_apply|branch_computations)="
+    r"(\{[^}]*\}|%[\w.\-]+)"
+)
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# Devices per pod: collectives whose replica group spans a pod boundary are
+# charged to DCI.  Default = v5e-256; the dry-run overrides it from the mesh.
+POD_SIZE = 256
+
+
+def set_pod_size(n: int) -> None:
+    global POD_SIZE
+    POD_SIZE = max(int(n), 1)
+
+
+def _dims(dim_str: str) -> List[int]:
+    return [int(d) for d in dim_str.split(",") if d] if dim_str else []
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _first_shape(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    return _dims(m.group(2)) if m else []
+
+
+def _last_shape_bytes(type_str: str) -> int:
+    ms = _SHAPE_RE.findall(type_str)
+    if not ms:
+        return 0
+    dt, dims = ms[-1]
+    n = 1
+    for d in _dims(dims):
+        n *= d
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+    operands: List[str]
+    calls: Dict[str, List[str]]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]              # instr name -> result type string
+    is_fused: bool = False              # called via fusion `calls=`
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.endswith("{"):
+                cur = Computation(name=m.group(1), instrs=[], shapes={})
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+        # operand names: inside the first (...) after opcode
+        paren = line[m.end() - 1:]
+        depth = 0
+        end = 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERAND_RE.findall(paren[:end + 1])
+        calls: Dict[str, List[str]] = {}
+        for attr, val in _CALL_ATTR_RE.findall(line):
+            names = _OPERAND_RE.findall(val)
+            calls.setdefault(attr, []).extend(names)
+        cur.instrs.append(Instr(name, type_str, opcode, line, operands, calls))
+        cur.shapes[name] = type_str
+    return comps
+
+
+def _mark_fused(comps: Dict[str, Computation]):
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                for c in ins.calls.get("calls", []):
+                    if c in comps:
+                        comps[c].is_fused = True
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Max integer constant reachable in the condition computation."""
+    seen = set()
+    stack = [cond_name]
+    best = 1
+    while stack:
+        c = stack.pop()
+        if c in seen or c not in comps:
+            continue
+        seen.add(c)
+        for ins in comps[c].instrs:
+            for m in _CONST_INT_RE.finditer(ins.line):
+                best = max(best, int(m.group(1)))
+            for lst in ins.calls.values():
+                stack.extend(lst)
+    return best
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    """mult[comp] = how many times the computation executes per step."""
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # topological propagation via worklist (HLO call graph is a DAG)
+    work = [entry]
+    visited_edges = set()
+    while work:
+        parent = work.pop()
+        pm = mult[parent]
+        if parent not in comps:
+            continue
+        for ins in comps[parent].instrs:
+            edges: List[Tuple[str, float]] = []
+            if ins.opcode == "while":
+                trip = _trip_count(comps, ins.calls.get("condition", [""])[0])
+                for b in ins.calls.get("body", []):
+                    edges.append((b, float(trip)))
+                for c in ins.calls.get("condition", []):
+                    edges.append((c, float(trip + 1)))
+            else:
+                for attr, lst in ins.calls.items():
+                    for c in lst:
+                        edges.append((c, 1.0))
+            for child, factor in edges:
+                key = (parent, ins.name, child)
+                if key in visited_edges:
+                    continue
+                visited_edges.add(key)
+                mult[child] += pm * factor
+                work.append(child)
+    return dict(mult)
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_shape = _first_shape(ins.type_str)
+    n_out = 1
+    for d in out_shape:
+        n_out *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    cdims = _dims(m.group(1)) if m else []
+    lhs = ins.operands[0] if ins.operands else None
+    lhs_shape = _first_shape(comp.shapes.get(lhs, "")) if lhs else []
+    k = 1
+    for ci in cdims:
+        if ci < len(lhs_shape):
+            k *= lhs_shape[ci]
+    return 2.0 * n_out * max(k, 1)
+
+
+_SKIP_MEM = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "partition-id", "replica-id", "iota", "rng-bit-generator",
+}
+
+
+def _operand_bytes(ins: Instr, comp: Computation) -> List[int]:
+    out = []
+    for op in ins.operands:
+        t = comp.shapes.get(op)
+        out.append(_type_bytes(t) if t else 0)
+    return out
+
+
+def _fusion_root_is_dus(ins: Instr, comps: Dict[str, Computation]) -> bool:
+    for c in ins.calls.get("calls", []):
+        called = comps.get(c)
+        if called and called.instrs and \
+                called.instrs[-1].opcode == "dynamic-update-slice":
+            return True
+    return False
+
+
+def _instr_bytes(ins: Instr, comp: Computation,
+                 comps: Optional[Dict[str, Computation]] = None) -> float:
+    """HBM traffic model per instruction execution."""
+    op = ins.opcode
+    if op in _SKIP_MEM or op.startswith("async"):
+        return 0.0
+    res = _type_bytes(ins.type_str)
+    if op in ("dynamic-slice", "gather", "slice"):
+        return 2.0 * res
+    if op == "dynamic-update-slice":
+        opb = _operand_bytes(ins, comp)
+        upd = opb[1] if len(opb) > 1 else 0
+        return 2.0 * upd + 1024          # window rw + index overhead
+    if op == "copy" or op.startswith("copy"):
+        return 2.0 * res
+    if op == "dot" or op == "convolution":
+        opb = _operand_bytes(ins, comp)
+        return res + float(sum(opb))
+    if op == "fusion":
+        kind = "kInput" if "kind=kInput" in ins.line else (
+            "kOutput" if "kind=kOutput" in ins.line else "kLoop")
+        opb = _operand_bytes(ins, comp)
+        if comps is not None and _fusion_root_is_dus(ins, comps):
+            # dynamic-update-slice-rooted fusion (scan-stack/KV-cache write):
+            # in-place semantics touch only the updated window, not the
+            # whole aliased buffer.  The window is the largest operand
+            # strictly smaller than the result buffer.
+            win = max((b for b in opb if b < res), default=res)
+            return 2.0 * win + 1024
+        if kind == "kInput":             # reduction-rooted: reads full inputs
+            return res + float(sum(opb))
+        # loop/output fusions stream result-sized tiles; sliced operands
+        # inside the fusion read at most result-size from each operand
+        return res + float(sum(min(b, res) for b in opb))
+    if op in ("reduce", "reduce-window", "sort", "scatter", "select-and-scatter"):
+        opb = _operand_bytes(ins, comp)
+        return res + float(sum(opb))
+    if any(op.startswith(c) for c in COLLECTIVE_OPS):
+        return 0.0                       # charged to the collective term
+    # default elementwise-ish op
+    opb = _operand_bytes(ins, comp)
+    return res + float(sum(min(b, res) if b else 0 for b in opb))
+
+
+def _collective_moved(ins: Instr) -> Tuple[float, int, bool, str]:
+    """(moved_bytes, group_size, crosses_pod, opbase) for a collective."""
+    opbase = next(c for c in COLLECTIVE_OPS if ins.opcode.startswith(c))
+    if ins.opcode.endswith("-done"):
+        return 0.0, 1, False, opbase
+    if ins.opcode.endswith("-start"):
+        nbytes = _last_shape_bytes(ins.type_str)
+    else:
+        nbytes = _type_bytes(ins.type_str)
+    gsize, crosses = 1, False
+    m = _GROUPS_IOTA_RE.search(ins.line)
+    if m:
+        gsize = int(m.group(2))
+        crosses = _iota_crosses(m)
+    else:
+        m2 = _GROUPS_LIST_RE.search(ins.line)
+        if m2:
+            ids = [int(x) for x in m2.group(1).split(",") if x.strip()]
+            gsize = max(len(ids), 1)
+            crosses = bool(ids) and (max(ids) // POD_SIZE) != (min(ids) // POD_SIZE)
+    if opbase == "all-reduce":
+        moved = 2.0 * nbytes
+    elif opbase == "reduce-scatter":
+        moved = float(nbytes) * max(gsize - 1, 1)
+    else:
+        moved = float(nbytes)
+    if opbase == "collective-permute":
+        crosses = crosses or "source_target_pairs" in ins.line and \
+            _permute_crosses(ins.line)
+    return moved, gsize, crosses, opbase
+
+
+def _iota_crosses(m) -> bool:
+    """Exact check for iota replica groups [G,S]<=[dims](T(perm))?: build the
+    device-id array, reshape/transpose per the iota spec, and test whether any
+    group holds devices from more than one pod."""
+    import numpy as np
+    num_groups, gsize = int(m.group(1)), int(m.group(2))
+    dims = [int(d) for d in m.group(3).split(",") if d]
+    n = int(np.prod(dims))
+    if num_groups * gsize != n or n > 1 << 16:
+        return gsize > POD_SIZE          # malformed/huge: conservative
+    ids = np.arange(n).reshape(dims)
+    if m.group(4):
+        perm = [int(d) for d in m.group(4).split(",") if d]
+        ids = ids.transpose(perm)
+    groups = ids.reshape(num_groups, gsize)
+    pods = groups // POD_SIZE
+    return bool((pods.max(axis=1) != pods.min(axis=1)).any())
+
+
+def _permute_crosses(line: str) -> bool:
+    m = re.search(r"source_target_pairs=\{([^}]*)\}", line)
+    if not m:
+        return False
+    for pair in m.group(1).split("},{"):
+        ids = [int(x) for x in re.findall(r"\d+", pair)]
+        if len(ids) >= 2 and (ids[0] // POD_SIZE) != (ids[1] // POD_SIZE):
+            return True
+    return False
+
+
+@dataclasses.dataclass
+class WalkResult:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    ici_bytes: float = 0.0
+    dci_bytes: float = 0.0
+    op_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    trip_counted_loops: int = 0
+
+
+def walk(hlo_text: str) -> WalkResult:
+    comps = parse_hlo(hlo_text)
+    _mark_fused(comps)
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+    if m:
+        entry = m.group(1)
+    else:  # fall back: last computation
+        entry = list(comps)[-1] if comps else ""
+    mult = _multipliers(comps, entry)
+
+    res = WalkResult()
+    counts: Counter = Counter()
+    for comp in comps.values():
+        cm = mult.get(comp.name, 0.0)
+        if cm <= 0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                res.trip_counted_loops += 1
+            if ins.opcode == "dot" or ins.opcode == "convolution":
+                res.flops += cm * _dot_flops(ins, comp)
+            if not comp.is_fused:
+                res.hbm_bytes += cm * _instr_bytes(ins, comp, comps)
+            if any(ins.opcode.startswith(c) for c in COLLECTIVE_OPS):
+                moved, gsize, crosses, opbase = _collective_moved(ins)
+                if moved > 0:
+                    counts[opbase] += cm
+                    if crosses:
+                        res.dci_bytes += cm * moved
+                    else:
+                        res.ici_bytes += cm * moved
+    res.op_counts = {k: float(v) for k, v in counts.items()}
+    return res

@@ -1,0 +1,74 @@
+"""Elastic scaling: recompute mesh + shardings when the device pool changes.
+
+The framework's invariants make elasticity cheap:
+  * checkpoints store unsharded values (restore re-shards onto any mesh);
+  * the data pipeline is a pure function of (step, shard, num_shards);
+  * sharding specs are derived from config + mesh, not baked into state.
+
+``plan_mesh`` picks the largest usable (data × model) grid for a device
+count, preferring to keep the model axis stable (changing TP degree
+invalidates more compiled artifacts than changing DP degree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    dropped_devices: int
+    changed: bool
+
+    def build(self, devices=None) -> Mesh:
+        devs = devices if devices is not None else jax.devices()
+        n = 1
+        for s in self.mesh_shape:
+            n *= s
+        import numpy as np
+        arr = np.asarray(devs[:n]).reshape(self.mesh_shape)
+        return Mesh(arr, self.axis_names)
+
+
+def plan_mesh(
+    available: int,
+    model_parallel: int,
+    prev_shape: Optional[Tuple[int, int]] = None,
+    min_data: int = 1,
+) -> ElasticPlan:
+    """Largest (data, model) grid with the requested TP degree; falls back
+    to smaller TP only if the pool is smaller than one model group."""
+    mp = model_parallel
+    while mp > 1 and available < mp:
+        mp //= 2
+    data = max(available // mp, min_data)
+    used = data * mp
+    changed = prev_shape is not None and prev_shape != (data, mp)
+    return ElasticPlan(
+        mesh_shape=(data, mp),
+        axis_names=("data", "model"),
+        dropped_devices=available - used,
+        changed=changed,
+    )
+
+
+def reshard_batch_assignment(
+    global_batch: int, num_shards: int
+) -> List[Tuple[int, int]]:
+    """(start, count) per shard — pure arithmetic, drives the data pipeline
+    after an elastic resize."""
+    base = global_batch // num_shards
+    rem = global_batch % num_shards
+    out = []
+    start = 0
+    for i in range(num_shards):
+        c = base + (1 if i < rem else 0)
+        out.append((start, c))
+        start += c
+    return out

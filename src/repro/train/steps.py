@@ -1,0 +1,110 @@
+"""Train / serve step builders: grad accumulation, remat, sharded lowering.
+
+``make_train_step`` returns the canonical fully-synchronous step (DP over
+pod×data + TP/EP over model, FSDP per config): microbatch scan accumulates
+fp32 gradients, AdamW updates sharded states, XLA inserts the gradient
+all-reduces implied by the output shardings.
+
+``make_fedttd_sync`` is the paper-derived alternative for the cross-pod
+link: pods run local steps (the train step above, with the pod axis held
+out of the batch), and every H steps exchange TT-compressed parameter
+deltas (core/comm_compress) — see train/fedttd.py for the driver.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.adamw import AdamW, AdamWState, apply_updates
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def make_train_step(
+    model,
+    optimizer: AdamW,
+    microbatch: Optional[int] = None,
+    batch_axes=("pod", "data"),
+    impl: str = "xla",
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    cfg = model.cfg
+    mbs = microbatch or cfg.microbatch
+
+    def loss_for(params, mb):
+        loss, metrics = model.loss_fn(params, mb, impl=impl)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        params = state.params
+
+        def split_mb(x):
+            b = x.shape[0]
+            assert b % mbs == 0, (b, mbs)
+            xr = x.reshape(mbs, b // mbs, *x.shape[1:])
+            if not batch_axes:          # unsharded (single-device) mode
+                return xr
+            # keep the per-microbatch shard layout on (pod, data)
+            return jax.lax.with_sharding_constraint(
+                xr, P(None, batch_axes, *([None] * (x.ndim - 1)))
+            )
+
+        batch_r = jax.tree.map(split_mb, batch)
+        grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+        def mb_step(acc, mb):
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc, grads
+            )
+            return acc, loss
+
+        acc0 = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        gacc, losses = jax.lax.scan(mb_step, acc0, batch_r)
+        grads = jax.tree.map(lambda g: g / mbs, gacc)
+
+        updates, opt = optimizer.update(grads, state.opt, params)
+        params = apply_updates(params, updates)
+        metrics = {
+            "loss": losses.mean(),
+            "grad_norm": _norm(grads),
+            "lr": optimizer.lr_at(opt.step),
+        }
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step
+
+
+def _norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in jax.tree.leaves(tree))
+    )
+
+
+def make_prefill_step(model, impl: str = "xla") -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, impl=impl)
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return decode_step
+
+
+def make_eval_step(model, impl: str = "xla") -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss_fn(params, batch, impl=impl)
+        return metrics
+    return eval_step

@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) for the TT decomposition invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as core
+from repro.core import truncation as trunc
+
+_dims = st.lists(st.integers(2, 6), min_size=2, max_size=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims=_dims, eps=st.sampled_from([0.01, 0.05, 0.2, 0.5]),
+       seed=st.integers(0, 2**16))
+def test_tt_error_bound(dims, eps, seed):
+    """The paper's δ = ε/√(d-1)·||W||_F budget guarantees the global bound
+    ||W - W_R||_F <= ε ||W||_F (Oseledets 2011, Thm 2.2)."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal(dims).astype(np.float32)
+    tt = core.ttd(w, eps=eps, svd_method="library")
+    rec = np.asarray(core.tt_reconstruct(tt))
+    rel = np.linalg.norm(rec - w) / max(np.linalg.norm(w), 1e-30)
+    assert rel <= eps + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims=_dims, seed=st.integers(0, 2**16))
+def test_tt_rank_bounds(dims, seed):
+    """TT ranks never exceed min(prod-left, prod-right)."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal(dims).astype(np.float32)
+    tt = core.ttd(w, eps=0.1, svd_method="library")
+    rmax = core.tt_max_ranks(dims, max_rank=10**9)
+    for k, r in enumerate(tt.ranks):
+        assert r <= rmax[k]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       eps=st.sampled_from([0.05, 0.3]))
+def test_static_matches_dynamic(seed, eps):
+    """Padded/masked in-graph TT must reconstruct EXACTLY like the dynamic
+    path (the invariant comm_compress relies on)."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((4, 5, 6)).astype(np.float32)
+    dyn = core.ttd(w, eps=eps, svd_method="library")
+    stat = core.ttd_static(jnp.asarray(w), eps=eps, max_rank=64)
+    rec_d = np.asarray(core.tt_reconstruct(dyn))
+    rec_s = np.asarray(core.static_tt_reconstruct(stat))
+    np.testing.assert_allclose(rec_s, rec_d, atol=1e-4)
+    np.testing.assert_array_equal(
+        np.asarray(stat.ranks), np.asarray(list(dyn.ranks))
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 40), seed=st.integers(0, 2**16),
+       delta=st.floats(1e-3, 100.0))
+def test_truncation_rank_monotone(n, seed, delta):
+    """δ-truncation: kept rank is in [1, n]; discarded tail < δ; kept head
+    (if any discard happened) has tail >= δ at the cut."""
+    rng = np.random.default_rng(seed)
+    s = np.sort(np.abs(rng.standard_normal(n)).astype(np.float32))[::-1]
+    r = trunc.truncation_rank(s, delta)
+    assert 1 <= r <= n
+    if r < n:
+        assert np.linalg.norm(s[r:]) < delta
+    static_r = int(trunc.truncation_rank_static(jnp.asarray(s),
+                                                jnp.asarray(delta)))
+    assert static_r == r
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_low_rank_compresses(seed):
+    """A (noisy) low-rank tensor must compress by > 1.5x at matched eps."""
+    rng = np.random.default_rng(seed)
+    u = rng.standard_normal((64, 4)).astype(np.float32)
+    v = rng.standard_normal((4, 60)).astype(np.float32)
+    w = (u @ v).reshape(8, 8, 6, 10)
+    w += 0.001 * rng.standard_normal(w.shape).astype(np.float32)
+    tt = core.ttd(w, eps=0.05, svd_method="library")
+    assert tt.compression_ratio > 1.5
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_tensorize_preserves_numel(seed):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(2, 300, size=2))
+    dims = core.tensorize_shape(shape, max_factor=32)
+    assert int(np.prod(dims)) == int(np.prod(shape))
+    assert all(d <= max(32, max(shape)) for d in dims)
+
+
+def test_two_phase_inside_ttd(rng):
+    """Algorithm 1 with the paper's own two-phase SVD as the inner kernel."""
+    w = rng.standard_normal((6, 7, 8)).astype(np.float32)
+    tt = core.ttd(w, eps=0.1, svd_method="two_phase")
+    rec = np.asarray(core.tt_reconstruct(tt))
+    rel = np.linalg.norm(rec - w) / np.linalg.norm(w)
+    assert rel <= 0.1 + 1e-5
