@@ -20,7 +20,9 @@ from repro.kernels.flash_attention.ops import mha_flash
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.frob_truncate.ops import delta_truncate
 from repro.kernels.frob_truncate.ref import frob_truncate_ref
-from repro.kernels.householder.ops import panel_factor, build_t
+from repro.kernels.householder.ops import (
+    panel_factor, panel_factor_batched, build_t,
+)
 from repro.kernels.householder.ref import panel_factor_ref
 from repro.kernels.singular_sort.ops import sort_singular_values
 from repro.kernels.singular_sort.ref import sort_desc_ref
@@ -30,12 +32,13 @@ def _maxerr(a, b) -> float:
     return float(jnp.max(jnp.abs(a - b)))
 
 
-def run(verbose: bool = True) -> List[Dict]:
+def run(verbose: bool = True, fast: bool = False) -> List[Dict]:
     rng = np.random.default_rng(0)
     rows = []
 
     # WY trailing update — the TTD-Engine GEMM-reuse analogue
-    for (m, n, b) in [(256, 192, 32), (384, 256, 64)]:
+    wy_shapes = [(256, 192, 32)] if fast else [(256, 192, 32), (384, 256, 64)]
+    for (m, n, b) in wy_shapes:
         a = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
         vs, taus, _ = panel_factor_ref(
             jnp.asarray(rng.standard_normal((m, b)), jnp.float32))
@@ -48,7 +51,8 @@ def run(verbose: bool = True) -> List[Dict]:
                      "max_err": err, "wall_s": dt})
 
     # Householder panel factorization
-    for (m, b) in [(256, 32), (512, 64)]:
+    panel_shapes = [(256, 32)] if fast else [(256, 32), (512, 64)]
+    for (m, b) in panel_shapes:
         ap = jnp.asarray(rng.standard_normal((m, b)), jnp.float32)
         t0 = time.perf_counter()
         vs, taus, r_ = jax.block_until_ready(panel_factor(ap, interpret=True))
@@ -57,6 +61,22 @@ def run(verbose: bool = True) -> List[Dict]:
         err = max(_maxerr(vs, vr), _maxerr(taus, tr), _maxerr(r_, rr_))
         rows.append({"kernel": "householder_panel", "shape": f"{m}x{b}",
                      "max_err": err, "wall_s": dt})
+
+    # batched panel factorization: one launch, batch on the grid — the
+    # dispatch-amortization path the compression planner rides
+    bsz, m, b = (4, 128, 16) if fast else (8, 256, 32)
+    aps = jnp.asarray(rng.standard_normal((bsz, m, b)), jnp.float32)
+    t0 = time.perf_counter()
+    vb, tb, rb = jax.block_until_ready(
+        panel_factor_batched(aps, interpret=True))
+    dt = time.perf_counter() - t0
+    err = 0.0
+    for k in range(bsz):
+        vr, tr, rr_ = panel_factor_ref(aps[k])
+        err = max(err, _maxerr(vb[k], vr), _maxerr(tb[k], tr),
+                  _maxerr(rb[k], rr_))
+    rows.append({"kernel": "householder_panel_batched",
+                 "shape": f"{bsz}x{m}x{b}", "max_err": err, "wall_s": dt})
 
     # bitonic singular-value sort
     for n in (128, 500):

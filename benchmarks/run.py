@@ -1,34 +1,55 @@
 """Benchmark harness — one entry per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only table1,table3,comm,roofline]
+    python -m benchmarks.run --fast            # CI smoke lane (small sweeps)
 
   table1    Paper Table I   — TD-method comparison on ResNet-32 params
   table3    Paper Table III — TTD phase breakdown, baseline vs TT-Edge
+  batched   Batched planner — bucketed one-launch compression vs serial
   comm      Paper Fig. 1    — cross-pod TT-compressed sync payload
   roofline  §Roofline       — per-cell roofline table from the dry-run
   kernels   Pallas kernel block-shape sweeps vs ref oracles (quick)
+
+``--fast`` propagates to every benchmark that accepts a ``fast=`` kwarg
+(smaller sweeps, single method) — the CI smoke lane that catches
+benchmark-script rot without paying full benchmark wall-clock.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
+import os
+import sys
 import time
 import traceback
 
+try:                                   # installed package (pip install -e .)
+    import repro                       # noqa: F401
+except ModuleNotFoundError:            # bare checkout: bootstrap src/
+    sys.path.insert(
+        0, os.path.join(os.path.dirname(__file__), "..", "src")
+    )
 
-def bench_table1():
+
+def bench_table1(fast: bool = False):
     from benchmarks import table1_compression
-    table1_compression.run()
+    table1_compression.run(fast=fast)
 
 
-def bench_table3():
+def bench_table3(fast: bool = False):
     from benchmarks import table3_phases
-    table3_phases.run()
+    table3_phases.run(max_tensors=4 if fast else 12)
 
 
-def bench_comm():
+def bench_batched(fast: bool = False):
+    from benchmarks import batched_compression
+    batched_compression.run(fast=fast)
+
+
+def bench_comm(fast: bool = False):
     from benchmarks import table_comm
-    table_comm.run()
+    table_comm.run(n_pods=2 if fast else 4)
 
 
 def bench_roofline():
@@ -36,14 +57,15 @@ def bench_roofline():
     roofline_bench.run()
 
 
-def bench_kernels():
+def bench_kernels(fast: bool = False):
     from benchmarks import kernel_bench
-    kernel_bench.run()
+    kernel_bench.run(fast=fast)
 
 
 ALL = {
     "table1": bench_table1,
     "table3": bench_table3,
+    "batched": bench_batched,
     "comm": bench_comm,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
@@ -54,15 +76,29 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke mode: shrunken sweeps, same code paths")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(ALL)
+    unknown = [n for n in names if n not in ALL]
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark(s): {','.join(unknown)} "
+            f"(choose from: {','.join(ALL)})"
+        )
 
     failures = []
     for name in names:
-        print(f"\n{'=' * 72}\n== benchmark: {name}\n{'=' * 72}", flush=True)
+        print(f"\n{'=' * 72}\n== benchmark: {name}"
+              + (" (fast)" if args.fast else "")
+              + f"\n{'=' * 72}", flush=True)
         t0 = time.time()
+        fn = ALL[name]
         try:
-            ALL[name]()
+            if "fast" in inspect.signature(fn).parameters:
+                fn(fast=args.fast)
+            else:
+                fn()
             print(f"== {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception:
             traceback.print_exc()

@@ -11,10 +11,21 @@ Public surface:
   compression.TTCompressor         — pytree-level model compression API
   comm_compress.*                  — FedTTD cross-pod TT-compressed sync
   blocked.*                        — WY-blocked HBD (beyond-paper, MXU form)
+  plan.build_plan                  — batched-compression planning pass
+  batch_exec.BucketExecutor        — one batched TT-SVD launch per bucket
+  *_batched                        — vmapped/batch-grid variants of the SVD
+                                     substrate (one launch, B problems)
 """
 
-from repro.core.hbd import householder_bidiagonalize, house, house_mm_update
-from repro.core.svd import svd, sorting_basis, svd_reconstruct, SVDResult
+from repro.core.hbd import (
+    householder_bidiagonalize,
+    householder_bidiagonalize_batched,
+    house,
+    house_mm_update,
+)
+from repro.core.svd import (
+    svd, svd_batched, sorting_basis, svd_reconstruct, SVDResult,
+)
 from repro.core.truncation import (
     delta_threshold,
     truncation_rank,
@@ -27,12 +38,22 @@ from repro.core.tt import (
     StaticTT,
     ttd,
     ttd_static,
+    ttd_static_batched,
     tt_reconstruct,
     static_tt_reconstruct,
+    static_tt_member,
+    static_tt_crop,
     tensorize_shape,
     auto_factorize,
     tt_max_ranks,
 )
+from repro.core.plan import (
+    Bucket,
+    CompressionPlan,
+    PlanEntry,
+    build_plan,
+)
+from repro.core.batch_exec import BucketExecutor, ExecStats, round_robin_chunks
 from repro.core.compression import (
     CompressionPolicy,
     TTCompressor,
@@ -41,6 +62,7 @@ from repro.core.compression import (
 )
 from repro.core.comm_compress import (
     CommCompressionConfig,
+    compress_delta_batched,
     pod_sync_tt,
     pod_sync_dense,
     fedttd_roundtrip,

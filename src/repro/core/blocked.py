@@ -169,3 +169,17 @@ def blocked_bidiagonalize(a: jax.Array, panel: int = 32):
     q, r = blocked_qr(a, panel=panel)
     u_r, b, v_bt = _hbd.householder_bidiagonalize(r)
     return q @ u_r, b, v_bt
+
+
+@functools.partial(jax.jit, static_argnames=("panel",))
+def blocked_bidiagonalize_batched(a: jax.Array, panel: int = 32):
+    """Batched WY/QR-first bidiagonalization of a (B, M, N) stack.
+
+    One launch per bucket: the blocked panel/WY schedule vmaps unchanged, so
+    member k equals ``blocked_bidiagonalize(a[k], panel)`` exactly.
+    """
+    if a.ndim != 3:
+        raise ValueError(f"expected (B, M, N), got {a.shape}")
+    return jax.vmap(
+        functools.partial(blocked_bidiagonalize, panel=panel)
+    )(a)

@@ -15,6 +15,23 @@ Policy defaults follow DESIGN.md §5:
   * a parameter is only kept in TT form if it actually compresses
     (ratio > 1), otherwise raw — same accept/reject the paper's δ-rule
     effectively applies.
+
+Execution plans
+---------------
+``plan="batched"`` (default) routes compression through the planning pass
+(``core/plan.py``): parameters are bucketed by (padded) tensorized shape
+and each bucket is decomposed by ONE batched TT-SVD launch
+(``core/batch_exec.py``), optionally sharded over a ``launch/mesh.py``
+device mesh.  ``plan="serial"`` is the original per-parameter loop — kept
+as the escape hatch and as the equivalence oracle the batched path is
+tested against: same ε guarantee, and for exact-shape bucket members the
+same accept/reject decision and live ranks.  The one intentional
+divergence is *padded* members (shapes merged into a larger bucket under
+``pad_tolerance``): their cores carry the padded mode dims, so payload
+accounting is up to ``pad_tolerance`` larger than serial and the ratio>1
+accept/reject is correspondingly more conservative — a padded member near
+the break-even point may be sent raw where serial would keep TT.  Set
+``pad_tolerance=0`` to disable padding merges and recover strict parity.
 """
 
 from __future__ import annotations
@@ -27,6 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tt as _tt
+from repro.core import plan as _plan
+from repro.core import batch_exec as _exec
 
 
 @dataclass
@@ -38,6 +57,9 @@ class CompressionPolicy:
     max_rank: Optional[int] = None
     svd_method: str = "two_phase"
     hbd_impl: str = "unblocked"
+    plan: str = "batched"           # "batched" | "serial" execution plan
+    pad_tolerance: float = 0.25     # max element overhead to join a bucket
+    serial_cutoff_elems: int = 1 << 24   # padded-work bound for batching
 
 
 @dataclass
@@ -47,6 +69,9 @@ class CompressedParam:
     raw: Optional[jax.Array]
     orig_shape: Tuple[int, ...]
     orig_dtype: Any
+    # set when the param was zero-padded into a larger bucket: the pre-pad
+    # tensorized dims the reconstruction must be cropped back to
+    crop_dims: Optional[Tuple[int, ...]] = None
 
     @property
     def payload_params(self) -> int:
@@ -60,19 +85,16 @@ class CompressionReport:
     total_params: int
     payload_params: int
     per_param: Dict[str, Tuple[str, int, int]] = field(default_factory=dict)
+    plan_fingerprint: Optional[str] = None
+    exec_stats: Optional[_exec.ExecStats] = None
 
     @property
     def ratio(self) -> float:
         return self.total_params / max(self.payload_params, 1)
 
 
-def _tensorize_dims(shape: Tuple[int, ...], policy: CompressionPolicy):
-    if len(shape) >= policy.min_dims:
-        return list(shape)
-    dims = _tt.tensorize_shape(shape, policy.max_factor)
-    if len(dims) < policy.min_dims:
-        dims = _tt.tensorize_shape(shape, max(8, policy.max_factor // 8))
-    return dims
+# single source of truth for raw/TT dim routing, shared with the planner
+_tensorize_dims = _plan.tensorize_dims
 
 
 def compress_param(x: jax.Array, policy: CompressionPolicy) -> CompressedParam:
@@ -100,16 +122,42 @@ def decompress_param(c: CompressedParam) -> jax.Array:
     if c.kind == "raw":
         return c.raw
     w = _tt.tt_reconstruct(c.tt)
+    if c.crop_dims is not None and tuple(c.crop_dims) != tuple(c.tt.shape):
+        w = w[tuple(slice(0, d) for d in c.crop_dims)]
     return w.reshape(c.orig_shape).astype(c.orig_dtype)
 
 
+def _default_mesh():
+    try:
+        from repro.launch.sharding import current_mesh
+        return current_mesh()
+    except Exception:                              # launch layer unavailable
+        return None
+
+
 class TTCompressor:
-    """Compress/decompress pytrees of parameters for transmission."""
+    """Compress/decompress pytrees of parameters for transmission.
 
-    def __init__(self, policy: Optional[CompressionPolicy] = None):
+    mesh: optional ``launch/mesh.py`` mesh the batched executor shards
+    bucket batches over (round-robin on the ``data`` axis); defaults to the
+    mesh registered with ``launch.sharding.set_mesh_axis_sizes``, if any.
+    """
+
+    def __init__(self, policy: Optional[CompressionPolicy] = None, mesh=None):
         self.policy = policy or CompressionPolicy()
+        self.mesh = mesh
 
-    def compress(self, params) -> Tuple[Any, CompressionReport]:
+    def compress(self, params, plan: Optional[str] = None
+                 ) -> Tuple[Any, CompressionReport]:
+        mode = plan or self.policy.plan
+        if mode == "serial":
+            return self._compress_serial(params)
+        if mode != "batched":
+            raise ValueError(f"unknown compression plan: {mode!r}")
+        return self._compress_batched(params)
+
+    # ---- the original per-param loop: fallback + equivalence oracle ----
+    def _compress_serial(self, params) -> Tuple[Any, CompressionReport]:
         leaves, treedef = jax.tree.flatten(params)
         paths = [
             "/".join(str(k) for k in path)
@@ -120,6 +168,50 @@ class TTCompressor:
         for name, leaf in zip(paths, leaves):
             c = compress_param(jnp.asarray(leaf), self.policy)
             out.append(c)
+            size = int(np.prod(c.orig_shape))
+            report.total_params += size
+            report.payload_params += c.payload_params
+            report.per_param[name] = (c.kind, size, c.payload_params)
+        return jax.tree.unflatten(treedef, out), report
+
+    # ---- the batched planner/executor path ----
+    def _compress_batched(self, params) -> Tuple[Any, CompressionReport]:
+        leaves, treedef = jax.tree.flatten(params)
+        paths = [
+            "/".join(str(k) for k in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(params)[0]
+        ]
+        cplan = _plan.build_plan(
+            params, self.policy,
+            pad_tolerance=self.policy.pad_tolerance,
+            serial_cutoff_elems=self.policy.serial_cutoff_elems,
+        )
+        executor = _exec.BucketExecutor(mesh=self.mesh or _default_mesh())
+        results = executor.run(cplan, leaves, self.policy)
+
+        out = [None] * len(leaves)
+        for e in cplan.raw:
+            x = jnp.asarray(leaves[e.index])
+            out[e.index] = CompressedParam("raw", None, x, e.shape, x.dtype)
+        for idx, (tt, pre_pad_dims) in results.items():
+            x = jnp.asarray(leaves[idx])
+            shape = tuple(x.shape)
+            size = int(np.prod(shape))
+            if tt.num_params >= size:             # reject non-compressions
+                out[idx] = CompressedParam("raw", None, x, shape, x.dtype)
+            else:
+                crop = (tuple(pre_pad_dims)
+                        if tuple(pre_pad_dims) != tuple(tt.shape) else None)
+                out[idx] = CompressedParam(
+                    "tt", tt, None, shape, x.dtype, crop_dims=crop
+                )
+
+        report = CompressionReport(
+            total_params=0, payload_params=0,
+            plan_fingerprint=cplan.fingerprint,
+            exec_stats=executor.stats,
+        )
+        for name, c in zip(paths, out):
             size = int(np.prod(c.orig_shape))
             report.total_params += size
             report.payload_params += c.payload_params

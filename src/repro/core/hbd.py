@@ -240,6 +240,23 @@ def householder_bidiagonalize(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("compute_uv",))
+def householder_bidiagonalize_batched(
+    a: jax.Array, compute_uv: bool = True
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched Algorithm 2 over a (B, M, N) stack: one launch, B HBDs.
+
+    Everything in the unblocked loop is masking arithmetic + fori_loop, so
+    ``jax.vmap`` lifts it wholesale; member k equals
+    ``householder_bidiagonalize(a[k])`` exactly.  This is the vmap'd entry
+    the batched TT-SVD planner feeds whole same-shape buckets through.
+    """
+    if a.ndim != 3:
+        raise ValueError(f"expected (B, M, N), got {a.shape}")
+    fn = functools.partial(householder_bidiagonalize, compute_uv=compute_uv)
+    return jax.vmap(fn)(a)
+
+
 def bidiagonal_bands(b: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Extract (diag, superdiag) bands from a dense M×N upper-bidiagonal B."""
     n = b.shape[1]

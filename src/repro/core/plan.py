@@ -1,0 +1,218 @@
+"""Batched-compression planning: pytree walk → shape buckets → launch plan.
+
+The serial ``TTCompressor`` loop pays one full dispatch+JIT round per
+parameter; a ResNet-32 checkpoint has 31 conv tensors but only a handful of
+distinct shapes.  The planner exploits that: it walks the parameter pytree,
+applies the policy's raw/TT routing, and groups every TT-bound parameter
+into a :class:`Bucket` keyed by its (padded) tensorized shape, so the
+executor (``core/batch_exec.py``) can decompose each bucket with ONE batched
+kernel launch instead of ``len(bucket)`` serial ones.
+
+Planning is a pure function of the pytree's (paths, shapes, dtypes) and the
+policy — two calls on the same inputs produce bitwise-identical plans
+(asserted by ``CompressionPlan.fingerprint`` in tests and benchmarks).
+
+Bucketing with padding
+----------------------
+Two parameters share a bucket when their tensorized dims are equal, OR when
+the smaller one can be zero-padded up to the larger's dims at a bounded
+element overhead (``pad_tolerance``).  Zero-padding is sound for the δ-rule:
+padding leaves ‖W‖_F unchanged, so the padded decomposition satisfies
+‖W_pad − R_pad‖_F ≤ ε‖W‖_F, and cropping the reconstruction back to the
+original extent can only shrink the error.  Padded members therefore keep
+the same ε guarantee as the serial path (property-tested).
+
+Scheduling
+----------
+Each bucket also carries an execution mode: buckets whose *padded* unfolding
+work would dwarf the serial dynamic-rank path (huge theoretical max ranks)
+are routed back to the serial loop — the planner's cost model keeps the
+batched path a strict win.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import tt as _tt
+
+
+@dataclass(frozen=True)
+class PlanEntry:
+    """One parameter's routing decision."""
+
+    name: str                        # flattened pytree path
+    index: int                       # position in jax.tree.flatten order
+    shape: Tuple[int, ...]           # original parameter shape
+    dims: Tuple[int, ...]            # tensorized dims (pre-padding)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """A group of same-(padded)-shape TT targets = one batched launch."""
+
+    dims: Tuple[int, ...]            # target dims every member pads up to
+    members: Tuple[PlanEntry, ...]   # sorted by name — deterministic order
+    execution: str                   # "batched" | "serial" (scheduler call)
+
+    @property
+    def batch(self) -> int:
+        return len(self.members)
+
+    @property
+    def padded_size(self) -> int:
+        return int(np.prod(self.dims))
+
+
+@dataclass(frozen=True)
+class CompressionPlan:
+    buckets: Tuple[Bucket, ...]
+    raw: Tuple[PlanEntry, ...]       # passthrough (too small / unfactorable)
+    num_leaves: int
+
+    @property
+    def tt_params(self) -> int:
+        return sum(b.batch for b in self.buckets)
+
+    @property
+    def batched_launches(self) -> int:
+        return sum(1 for b in self.buckets if b.execution == "batched")
+
+    @property
+    def fingerprint(self) -> str:
+        """Stable content hash — equal iff the plans are bitwise-identical."""
+        h = hashlib.sha256()
+        for b in self.buckets:
+            h.update(repr((b.dims, b.execution,
+                           [(m.name, m.index, m.shape, m.dims)
+                            for m in b.members])).encode())
+        h.update(repr([(e.name, e.index, e.shape) for e in self.raw]).encode())
+        return h.hexdigest()
+
+    def describe(self) -> str:
+        lines = [f"plan: {self.tt_params} TT params in {len(self.buckets)} "
+                 f"buckets, {len(self.raw)} raw"]
+        for b in self.buckets:
+            pads = sum(1 for m in b.members if m.dims != b.dims)
+            lines.append(
+                f"  bucket dims={b.dims} batch={b.batch} "
+                f"exec={b.execution}" + (f" (padded members: {pads})"
+                                         if pads else "")
+            )
+        return "\n".join(lines)
+
+
+def tensorize_dims(shape: Tuple[int, ...], policy) -> List[int]:
+    """Policy dim selection, shared by the planner and the serial
+    compressor loop (compression.py imports this — single source of truth,
+    so the two paths can never route a shape differently)."""
+    if len(shape) >= policy.min_dims:
+        return list(shape)
+    dims = _tt.tensorize_shape(shape, policy.max_factor)
+    if len(dims) < policy.min_dims:
+        dims = _tt.tensorize_shape(shape, max(8, policy.max_factor // 8))
+    return dims
+
+
+def padded_work_estimate(dims: Sequence[int], max_rank: Optional[int]) -> int:
+    """Σ_k (rmax_{k-1}·n_k·tail_k) — elements touched by the padded sweep.
+
+    The static batched path pads every unfolding to the theoretical max
+    ranks; when those explode (deep tensorizations of huge matrices) the
+    dynamic-rank serial path is asymptotically cheaper and the scheduler
+    must fall back to it.
+    """
+    cap = max_rank if max_rank is not None else 1 << 30
+    rmax = _tt.tt_max_ranks(dims, cap)
+    total = 0
+    for k in range(len(dims) - 1):
+        rows = rmax[k] * dims[k]
+        tail = int(np.prod(dims[k + 1:]))
+        total += rows * tail
+    return total
+
+
+def _leaf_paths(params) -> List[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    return ["/".join(str(k) for k in path) for path, _ in flat]
+
+
+def build_plan(
+    params,
+    policy,
+    pad_tolerance: float = 0.25,
+    serial_cutoff_elems: int = 1 << 24,
+) -> CompressionPlan:
+    """Deterministic planning pass over a parameter pytree.
+
+    pad_tolerance: a member may join a larger bucket if padding inflates its
+      element count by at most this fraction (0 disables padding merges).
+    serial_cutoff_elems: buckets whose per-member padded sweep would touch
+      more elements than this are scheduled ``execution="serial"``.
+    """
+    leaves, _ = jax.tree.flatten(params)
+    paths = _leaf_paths(params)
+
+    raw: List[PlanEntry] = []
+    tt_entries: List[PlanEntry] = []
+    for idx, (name, leaf) in enumerate(zip(paths, leaves)):
+        shape = tuple(int(d) for d in leaf.shape)
+        entry_dims = tuple(tensorize_dims(shape, policy))
+        entry = PlanEntry(name=name, index=idx, shape=shape, dims=entry_dims)
+        size = entry.size
+        if size < policy.min_size or min(shape or (1,)) == 0:
+            raw.append(entry)
+        elif len(entry_dims) < 2:
+            raw.append(entry)
+        else:
+            tt_entries.append(entry)
+
+    # ---- bucketing: group by ndim, greedily absorb pad-compatible dims ----
+    by_ndim: Dict[int, Dict[Tuple[int, ...], List[PlanEntry]]] = {}
+    for e in tt_entries:
+        by_ndim.setdefault(len(e.dims), {}).setdefault(e.dims, []).append(e)
+
+    buckets: List[Bucket] = []
+    for ndim in sorted(by_ndim):
+        groups = by_ndim[ndim]
+        # largest target first; ties broken lexicographically — deterministic
+        order = sorted(
+            groups, key=lambda d: (int(np.prod(d)), d), reverse=True
+        )
+        absorbed: set = set()
+        for target in order:
+            if target in absorbed:
+                continue
+            members = list(groups[target])
+            tsize = int(np.prod(target))
+            for cand in order:
+                if cand == target or cand in absorbed:
+                    continue
+                fits = all(c <= t for c, t in zip(cand, target))
+                overhead = tsize / int(np.prod(cand)) - 1.0
+                if fits and overhead <= pad_tolerance:
+                    members.extend(groups[cand])
+                    absorbed.add(cand)
+            members.sort(key=lambda m: (m.name, m.index))
+            work = padded_work_estimate(target, policy.max_rank)
+            execution = "batched" if work <= serial_cutoff_elems else "serial"
+            buckets.append(Bucket(
+                dims=target, members=tuple(members), execution=execution,
+            ))
+            absorbed.add(target)
+
+    # stable global order: by dims signature
+    buckets.sort(key=lambda b: (len(b.dims), b.dims))
+    raw.sort(key=lambda e: e.index)
+    return CompressionPlan(
+        buckets=tuple(buckets), raw=tuple(raw), num_leaves=len(leaves)
+    )

@@ -101,5 +101,24 @@ def svd(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("method", "hbd_impl", "panel"))
+def svd_batched(
+    a: jax.Array,
+    method: str = "two_phase",
+    hbd_impl: str = "unblocked",
+    panel: int = 32,
+) -> SVDResult:
+    """Batched SVD of a (B, M, N) stack — one launch, B factorizations.
+
+    vmaps the selected factorization path (two-phase HBD included), so a
+    bucket of same-shape unfoldings costs a single dispatch instead of B.
+    Member k of the result equals ``svd(a[k], ...)`` exactly.
+    """
+    if a.ndim != 3:
+        raise ValueError(f"svd_batched expects (B, M, N), got {a.shape}")
+    fn = functools.partial(svd, method=method, hbd_impl=hbd_impl, panel=panel)
+    return jax.vmap(fn)(a)
+
+
 def svd_reconstruct(r: SVDResult) -> jax.Array:
     return (r.u * r.s[None, :]) @ r.vt

@@ -204,6 +204,54 @@ def ttd_static(
     return StaticTT(cores=cores, ranks=jnp.stack(ranks), shape=shape)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("eps", "max_rank", "svd_method", "hbd_impl")
+)
+def ttd_static_batched(
+    w: jax.Array,
+    eps: float = 0.05,
+    max_rank: int = 64,
+    svd_method: str = "library",
+    hbd_impl: str = "unblocked",
+) -> StaticTT:
+    """Batched Algorithm 1: one launch decomposes a whole (B, n_1..n_N) stack.
+
+    Every member runs the identical static-shape TT-SVD (``ttd_static``)
+    under ``jax.vmap``, so the returned ``StaticTT`` carries batched leaves:
+    cores[k] is (B, rmax_{k-1}, n_k, rmax_k) and ``ranks`` is (B, N+1).
+    Per-member results are bit-identical to serial ``ttd_static`` calls —
+    the equivalence the batched compression planner relies on.
+    """
+    fn = functools.partial(
+        ttd_static, eps=eps, max_rank=max_rank,
+        svd_method=svd_method, hbd_impl=hbd_impl,
+    )
+    return jax.vmap(fn)(w)
+
+
+def static_tt_member(tt: StaticTT, i: int) -> StaticTT:
+    """Member ``i`` of a batched StaticTT (host-side view)."""
+    return StaticTT(
+        cores=[c[i] for c in tt.cores], ranks=tt.ranks[i], shape=tt.shape
+    )
+
+
+def static_tt_crop(tt: StaticTT, eps: float = 0.0) -> TTTensor:
+    """Crop an (unbatched) StaticTT's zero-masked rank padding away.
+
+    The live-rank slices of the padded cores reconstruct exactly the padded
+    product (the masked tails contribute nothing), so this converts the
+    in-graph result into the compact host-side ``TTTensor`` the offline
+    compressor trades in.
+    """
+    ranks = [int(r) for r in np.asarray(jax.device_get(tt.ranks))]
+    cores = [
+        jnp.asarray(np.asarray(jax.device_get(c))[: ranks[k], :, : ranks[k + 1]])
+        for k, c in enumerate(tt.cores)
+    ]
+    return TTTensor(cores=cores, shape=tt.shape, ranks=tuple(ranks), eps=eps)
+
+
 def static_tt_reconstruct(tt: StaticTT) -> jax.Array:
     acc = tt.cores[0]
     for g in tt.cores[1:]:

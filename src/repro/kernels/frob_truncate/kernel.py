@@ -59,3 +59,36 @@ def frob_truncate(s: jax.Array, delta, interpret: bool = False):
         jnp.asarray(delta, jnp.float32).reshape(1, 1),
     )
     return tail[0], rank[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def frob_truncate_batched(s: jax.Array, delta, interpret: bool = False):
+    """δ-truncate each row of a (B, n) σ stack in ONE kernel launch.
+
+    ``delta`` is (B,) — each grid program applies its own member's budget.
+    Returns (tail_norms (B,n), ranks (B,) int32); member k equals
+    ``frob_truncate(s[k], delta[k])``.
+    """
+    bsz, n = s.shape
+    kern = functools.partial(_truncate_kernel, n=n)
+    tail, rank = pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, n), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(
+        s.astype(jnp.float32),
+        jnp.asarray(delta, jnp.float32).reshape(bsz, 1),
+    )
+    return tail, rank[:, 0]

@@ -8,6 +8,9 @@ import jax
 
 from repro.kernels import common
 from repro.kernels.frob_truncate.kernel import frob_truncate as _kernel
+from repro.kernels.frob_truncate.kernel import (
+    frob_truncate_batched as _kernel_batched,
+)
 from repro.kernels.frob_truncate.ref import frob_truncate_ref
 
 
@@ -19,4 +22,12 @@ def delta_truncate(s: jax.Array, delta, interpret: bool | None = None):
     return _kernel(s, delta, interpret=interpret)
 
 
-__all__ = ["delta_truncate", "frob_truncate_ref"]
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_truncate_batched(s: jax.Array, delta, interpret: bool | None = None):
+    """One launch δ-truncating every row of a (B, n) σ stack; delta is (B,)."""
+    if interpret is None:
+        interpret = common.use_interpret()
+    return _kernel_batched(s, delta, interpret=interpret)
+
+
+__all__ = ["delta_truncate", "delta_truncate_batched", "frob_truncate_ref"]

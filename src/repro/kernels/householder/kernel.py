@@ -29,8 +29,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _panel_kernel(a_ref, v_ref, tau_ref, r_ref):
-    m, b = a_ref.shape
+def _panel_body(acc0):
+    """The HBD-ACC column loop on an (M, b) panel held in VMEM.
+
+    Returns (vs, taus, r_head): normalized reflectors, their taus, and the
+    b×b triangular head of the reduced panel.  Shared by the single-panel
+    and the batch-grid kernels — the batched variant simply instantiates one
+    grid program per panel.
+    """
+    m, b = acc0.shape
     rows = jax.lax.broadcasted_iota(jnp.int32, (m, 1), 0)[:, 0]
 
     def col_step(j, carry):
@@ -61,17 +68,31 @@ def _panel_kernel(a_ref, v_ref, tau_ref, r_ref):
         taus = jnp.where(jax.lax.iota(jnp.int32, b) == j, tau, taus)
         return acc, vs, taus
 
-    acc0 = a_ref[...].astype(jnp.float32)
     vs0 = jnp.zeros((m, b), jnp.float32)
     taus0 = jnp.zeros((b,), jnp.float32)
     acc, vs, taus = jax.lax.fori_loop(0, b, col_step, (acc0, vs0, taus0))
 
-    v_ref[...] = vs
-    tau_ref[...] = taus[None, :]
     # R: upper-triangular b×b head of the reduced panel
     cols = jax.lax.iota(jnp.int32, b)
     head = acc[:b, :]
-    r_ref[...] = jnp.where(cols[:, None] <= cols[None, :], head, 0.0)
+    r_head = jnp.where(cols[:, None] <= cols[None, :], head, 0.0)
+    return vs, taus, r_head
+
+
+def _panel_kernel(a_ref, v_ref, tau_ref, r_ref):
+    vs, taus, r_head = _panel_body(a_ref[...].astype(jnp.float32))
+    v_ref[...] = vs
+    tau_ref[...] = taus[None, :]
+    r_ref[...] = r_head
+
+
+def _panel_kernel_batched(a_ref, v_ref, tau_ref, r_ref):
+    # one grid program per batch member; blocks carry a leading length-1
+    # batch dim selected by the grid index
+    vs, taus, r_head = _panel_body(a_ref[0].astype(jnp.float32))
+    v_ref[0] = vs
+    tau_ref[0] = taus[None, :]
+    r_ref[0] = r_head
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -95,3 +116,31 @@ def panel_factor(a_panel: jax.Array, interpret: bool = False):
         interpret=interpret,
     )(a_panel.astype(jnp.float32))
     return v, tau[0], r
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def panel_factor_batched(a_panels: jax.Array, interpret: bool = False):
+    """Factor a (B, M, b) stack of panels — the batch axis is the leading
+    grid dimension, so all B HBD-ACC programs issue from ONE kernel launch.
+
+    Returns (V (B,M,b), taus (B,b), R (B,b,b)); member k equals
+    ``panel_factor(a_panels[k])``.
+    """
+    bsz, m, b = a_panels.shape
+    v, tau, r = pl.pallas_call(
+        _panel_kernel_batched,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((1, m, b), lambda i: (i, 0, 0))],
+        out_specs=(
+            pl.BlockSpec((1, m, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, m, b), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, 1, b), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, b, b), jnp.float32),
+        ),
+        interpret=interpret,
+    )(a_panels.astype(jnp.float32))
+    return v, tau[:, 0, :], r

@@ -10,6 +10,9 @@ import jax.numpy as jnp
 
 from repro.kernels import common
 from repro.kernels.householder.kernel import panel_factor as _panel_kernel
+from repro.kernels.householder.kernel import (
+    panel_factor_batched as _panel_kernel_batched,
+)
 from repro.kernels.householder.ref import panel_factor_ref
 from repro.kernels.block_update.ops import block_wy_update
 
@@ -18,6 +21,13 @@ def panel_factor(a_panel: jax.Array, interpret: bool | None = None):
     if interpret is None:
         interpret = common.use_interpret()
     return _panel_kernel(a_panel, interpret=interpret)
+
+
+def panel_factor_batched(a_panels: jax.Array, interpret: bool | None = None):
+    """One launch factoring a (B, M, b) panel stack (batch = grid dim 0)."""
+    if interpret is None:
+        interpret = common.use_interpret()
+    return _panel_kernel_batched(a_panels, interpret=interpret)
 
 
 def build_t(vs: jax.Array, taus: jax.Array) -> jax.Array:
@@ -93,4 +103,7 @@ def qr_blocked(
     return q, r
 
 
-__all__ = ["panel_factor", "panel_factor_ref", "build_t", "qr_blocked"]
+__all__ = [
+    "panel_factor", "panel_factor_batched", "panel_factor_ref", "build_t",
+    "qr_blocked",
+]

@@ -58,6 +58,38 @@ def _sort_kernel(s_ref, out_s_ref, out_idx_ref, *, n):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort_desc_batched(s: jax.Array, interpret: bool = False):
+    """Sort each row of a (B, n) stack descending in ONE kernel launch.
+
+    The batch axis is the leading grid dimension — each grid program runs
+    the full bitonic network on its own VMEM-resident row.  Returns
+    (sorted (B,n), index_vectors (B,n)); row k equals
+    ``bitonic_sort_desc(s[k])``.
+    """
+    bsz, n = s.shape
+    n_pad = 1 << (n - 1).bit_length()
+    s_p = jnp.full((bsz, n_pad), NEG_INF, jnp.float32)
+    s_p = s_p.at[:, :n].set(s.astype(jnp.float32))
+
+    kern = functools.partial(_sort_kernel, n=n_pad)
+    out_s, out_idx = pl.pallas_call(
+        kern,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((1, n_pad), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((1, n_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_pad), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, n_pad), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, n_pad), jnp.int32),
+        ),
+        interpret=interpret,
+    )(s_p)
+    return out_s[:, :n].astype(s.dtype), out_idx[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
 def bitonic_sort_desc(s: jax.Array, interpret: bool = False):
     """Sort (n,) descending; returns (sorted, index_vector).  Pads to a power
     of two with -inf sentinels (dropped before returning)."""

@@ -9,6 +9,9 @@ import jax.numpy as jnp
 
 from repro.kernels import common
 from repro.kernels.singular_sort.kernel import bitonic_sort_desc as _kernel
+from repro.kernels.singular_sort.kernel import (
+    bitonic_sort_desc_batched as _kernel_batched,
+)
 from repro.kernels.singular_sort.ref import sort_desc_ref, sorting_basis_ref
 
 
@@ -17,6 +20,16 @@ def sort_singular_values(s: jax.Array, interpret: bool | None = None):
     if interpret is None:
         interpret = common.use_interpret()
     return _kernel(s, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_singular_values_batched(
+    s: jax.Array, interpret: bool | None = None
+):
+    """One launch sorting every row of a (B, n) σ stack descending."""
+    if interpret is None:
+        interpret = common.use_interpret()
+    return _kernel_batched(s, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -30,6 +43,6 @@ def sorting_basis(
 
 
 __all__ = [
-    "sort_singular_values", "sorting_basis", "sort_desc_ref",
-    "sorting_basis_ref",
+    "sort_singular_values", "sort_singular_values_batched", "sorting_basis",
+    "sort_desc_ref", "sorting_basis_ref",
 ]

@@ -16,23 +16,38 @@ import jax
 from jax.sharding import Mesh
 
 
+def make_mesh(shape, axes) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where the installed jax
+    supports them (``jax.sharding.AxisType`` landed after 0.4.37; older
+    jaxlibs predate explicit-sharding mode entirely, so plain Auto meshes
+    are the correct fallback)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1) -> Mesh:
     """Small mesh over whatever devices exist (tests / smoke runs)."""
     n = jax.device_count()
     dp = n // model_parallel
-    return jax.make_mesh(
-        (dp, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((dp, model_parallel), ("data", "model"))
+
+
+def data_axis_size(mesh: Mesh | None, axis: str = "data") -> int:
+    """Number of devices along ``axis`` (1 when absent/no mesh) — the
+    fan-out the batched compression scheduler round-robins buckets over."""
+    if mesh is None or axis not in mesh.axis_names:
+        return 1
+    return int(mesh.devices.shape[mesh.axis_names.index(axis)])
 
 
 def batch_axes(mesh: Mesh):

@@ -18,6 +18,19 @@ import numpy as np
 from repro.models import common
 
 
+def _shard_map(body, mesh, in_specs, out_specs):
+    """``jax.shard_map`` (with VMA checking off) across jax versions: the
+    top-level entry + ``check_vma`` landed after 0.4.x, where the API lives
+    in ``jax.experimental.shard_map`` and the flag is ``check_rep``."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm_old
+    return sm_old(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 class MLPParams(NamedTuple):
     w_gate: jax.Array             # (D, F)
     w_up: jax.Array               # (D, F)
@@ -203,7 +216,7 @@ def moe_apply_a2a(x, p: MoEParams, cfg, capacity_factor: float = 1.25):
 
     bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0]
                                                     if batch_axes else None)
-    return jax.shard_map(
+    return _shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None),
                   P(f_ax, None),
@@ -211,7 +224,6 @@ def moe_apply_a2a(x, p: MoEParams, cfg, capacity_factor: float = 1.25):
                   P("model", f_ax, None),
                   P("model", None, f_ax)),
         out_specs=P(bspec, None, None),
-        check_vma=False,
     )(x, p.router, p.w_gate, p.w_up, p.w_down)
 
 

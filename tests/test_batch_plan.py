@@ -1,0 +1,229 @@
+"""Batched compression planner/executor: determinism, serial equivalence,
+padded-bucket ε bound, round-robin scheduling."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.core.batch_exec import round_robin_chunks
+from repro.core.compression import CompressionPolicy, TTCompressor
+from repro.core import tt as _tt
+
+
+def _lowrank(rng, shape, r=4):
+    m = int(shape[0])
+    n = int(np.prod(shape[1:]))
+    w = (rng.standard_normal((m, r)) @ rng.standard_normal((r, n)))
+    return jnp.asarray(w.reshape(shape).astype(np.float32))
+
+
+def _mixed_pytree(rng):
+    """Conv kernels (two shared shapes + one pad-compatible), a matrix that
+    gets re-tensorized, and raw passthroughs."""
+    return {
+        "s0": {"conv1": _lowrank(rng, (16, 12, 3, 3)),
+               "conv2": _lowrank(rng, (16, 12, 3, 3)),
+               "bn": jnp.ones((16,), jnp.float32)},
+        "s1": {"conv1": _lowrank(rng, (16, 10, 3, 3))},   # pads into 16x12
+        "fc": _lowrank(rng, (64, 48)),
+        "bias": jnp.zeros((10,), jnp.float32),
+    }
+
+
+POLICY = CompressionPolicy(eps=0.08, min_size=256, svd_method="library")
+
+
+def test_plan_deterministic(rng):
+    params = _mixed_pytree(rng)
+    p1 = plan_mod.build_plan(params, POLICY)
+    p2 = plan_mod.build_plan(params, POLICY)
+    assert p1.fingerprint == p2.fingerprint
+    assert p1 == p2                        # frozen dataclasses: full equality
+    # every leaf is routed exactly once
+    routed = [m.index for b in p1.buckets for m in b.members]
+    routed += [e.index for e in p1.raw]
+    assert sorted(routed) == list(range(p1.num_leaves))
+
+
+def test_plan_buckets_same_shapes_together(rng):
+    params = _mixed_pytree(rng)
+    p = plan_mod.build_plan(params, POLICY)
+    by_dims = {b.dims: b for b in p.buckets}
+    # the two (16,12,3,3) convs and the pad-compatible (16,10,3,3) share one
+    # bucket (pad overhead 12/10 - 1 = 0.2 <= 0.25)
+    assert (16, 12, 3, 3) in by_dims
+    assert by_dims[(16, 12, 3, 3)].batch == 3
+    padded = [m for m in by_dims[(16, 12, 3, 3)].members
+              if m.dims != (16, 12, 3, 3)]
+    assert len(padded) == 1 and padded[0].dims == (16, 10, 3, 3)
+
+
+def test_plan_pad_tolerance_zero_disables_merge(rng):
+    params = _mixed_pytree(rng)
+    p = plan_mod.build_plan(params, POLICY, pad_tolerance=0.0)
+    dims = {b.dims for b in p.buckets}
+    assert (16, 10, 3, 3) in dims          # kept as its own bucket
+
+
+def test_batched_matches_serial_oracle(rng):
+    params = _mixed_pytree(rng)
+    comp = TTCompressor(POLICY)
+    cb, rb = comp.compress(params, plan="batched")
+    cs, rs = comp.compress(params, plan="serial")
+    # identical routing decisions and payload accounting
+    assert {k: v[0] for k, v in rb.per_param.items()} == \
+        {k: v[0] for k, v in rs.per_param.items()}
+    bb = comp.decompress(cb)
+    ss = comp.decompress(cs)
+    import jax
+    for (pb, ps) in zip(jax.tree.leaves(bb), jax.tree.leaves(ss)):
+        # same-shape bucket members are bit-exact vs serial; the padded
+        # member only differs by float association in the padded SVD
+        np.testing.assert_allclose(
+            np.asarray(pb), np.asarray(ps), atol=1e-4
+        )
+
+
+def test_padded_member_keeps_eps_bound(rng):
+    """Zero-padding into a bigger bucket must not break ‖W-R‖ <= ε‖W‖."""
+    eps = 0.1
+    pol = CompressionPolicy(eps=eps, min_size=64, svd_method="library",
+                            pad_tolerance=0.5)
+    w = _lowrank(rng, (8, 5, 3, 3), r=3)
+    w = w + 0.01 * jnp.asarray(
+        rng.standard_normal(w.shape).astype(np.float32))
+    params = {"big": _lowrank(rng, (8, 6, 3, 3)), "padded": w}
+    comp = TTCompressor(pol)
+    compressed, report = comp.compress(params, plan="batched")
+    plan = plan_mod.build_plan(params, pol, pad_tolerance=0.5)
+    assert len(plan.buckets) == 1 and plan.buckets[0].batch == 2
+    back = comp.decompress(compressed)
+    rel = float(jnp.linalg.norm(back["padded"] - w) / jnp.linalg.norm(w))
+    assert rel <= eps + 1e-5
+    assert back["padded"].shape == w.shape
+
+
+def test_raw_passthrough_bitexact(rng):
+    params = _mixed_pytree(rng)
+    comp = TTCompressor(POLICY)
+    cb, _ = comp.compress(params, plan="batched")
+    back = comp.decompress(cb)
+    np.testing.assert_array_equal(np.asarray(back["s0"]["bn"]),
+                                  np.asarray(params["s0"]["bn"]))
+    np.testing.assert_array_equal(np.asarray(back["bias"]),
+                                  np.asarray(params["bias"]))
+
+
+def test_dispatch_reduction_reported(rng):
+    params = _mixed_pytree(rng)
+    comp = TTCompressor(POLICY)
+    _, report = comp.compress(params, plan="batched")
+    st = report.exec_stats
+    assert st is not None
+    assert st.bucket_launches == len(
+        plan_mod.build_plan(params, POLICY).buckets)
+    assert st.serial_equiv_dispatches > st.total_dispatches
+    assert report.plan_fingerprint
+
+
+def test_serial_cutoff_falls_back(rng):
+    """Buckets beyond the padded-work bound must run the serial path."""
+    params = {"w": _lowrank(rng, (16, 12, 3, 3))}
+    pol = CompressionPolicy(eps=0.1, min_size=64, svd_method="library",
+                            serial_cutoff_elems=10)   # absurdly low bound
+    p = plan_mod.build_plan(params, pol, serial_cutoff_elems=10)
+    assert all(b.execution == "serial" for b in p.buckets)
+    comp = TTCompressor(pol)
+    cb, rb = comp.compress(params, plan="batched")
+    assert rb.exec_stats.bucket_launches == 0
+    assert rb.exec_stats.serial_params == 1
+    back = comp.decompress(cb)
+    np.testing.assert_allclose(
+        np.asarray(back["w"]), np.asarray(params["w"]), atol=0.1 * 100
+    )
+
+
+def test_round_robin_chunks():
+    chunks = round_robin_chunks(7, 3)
+    assert len(chunks) == 3
+    assert chunks[0] == [0, 3, 6]
+    assert chunks[1] == [1, 4, -1]         # padded to equal length
+    assert chunks[2] == [2, 5, -1]
+    # degenerate cases
+    assert round_robin_chunks(2, 1) == [[0, 1]]
+    assert round_robin_chunks(0, 2) == [[], []]
+
+
+def test_ttd_static_batched_matches_serial():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.standard_normal((4, 6, 5, 4)).astype(np.float32))
+    batched = _tt.ttd_static_batched(w, eps=0.1, max_rank=32,
+                                     svd_method="library")
+    for k in range(4):
+        member = _tt.static_tt_member(batched, k)
+        serial = _tt.ttd_static(w[k], eps=0.1, max_rank=32,
+                                svd_method="library")
+        np.testing.assert_array_equal(np.asarray(member.ranks),
+                                      np.asarray(serial.ranks))
+        np.testing.assert_allclose(
+            np.asarray(_tt.static_tt_reconstruct(member)),
+            np.asarray(_tt.static_tt_reconstruct(serial)), atol=1e-5,
+        )
+        # cropping the padding reproduces the reconstruction exactly
+        tt = _tt.static_tt_crop(member)
+        np.testing.assert_allclose(
+            np.asarray(_tt.tt_reconstruct(tt)),
+            np.asarray(_tt.static_tt_reconstruct(member)), atol=1e-5,
+        )
+
+
+def test_svd_batched_matches_serial():
+    from repro.core.svd import svd, svd_batched, svd_reconstruct
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(rng.standard_normal((3, 24, 10)).astype(np.float32))
+    for method, impl in [("library", "unblocked"), ("two_phase", "unblocked"),
+                         ("two_phase", "blocked")]:
+        rb = svd_batched(a, method=method, hbd_impl=impl, panel=8)
+        for k in range(3):
+            rs = svd(a[k], method=method, hbd_impl=impl, panel=8)
+            np.testing.assert_allclose(np.asarray(rb.s[k]), np.asarray(rs.s),
+                                       atol=1e-4)
+            np.testing.assert_allclose(
+                np.asarray(svd_reconstruct(
+                    type(rs)(rb.u[k], rb.s[k], rb.vt[k]))),
+                np.asarray(a[k]), atol=1e-3,
+            )
+
+
+def test_hbd_batched_matches_serial():
+    from repro.core.hbd import (
+        householder_bidiagonalize, householder_bidiagonalize_batched,
+    )
+    rng = np.random.default_rng(5)
+    a = jnp.asarray(rng.standard_normal((3, 12, 8)).astype(np.float32))
+    ub, bb, vbt = householder_bidiagonalize_batched(a)
+    for k in range(3):
+        u, b, vt = householder_bidiagonalize(a[k])
+        np.testing.assert_allclose(np.asarray(ub[k]), np.asarray(u),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(bb[k]), np.asarray(b),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(vbt[k]), np.asarray(vt),
+                                   atol=1e-5)
+
+
+def test_fedttd_roundtrip_batched_matches_serial(rng):
+    from repro.core.comm_compress import CommCompressionConfig, fedttd_roundtrip
+    cfg = CommCompressionConfig(eps=0.05, max_rank=16, min_size=64)
+    base = rng.standard_normal((32, 24)).astype(np.float32)
+    deltas = [jnp.asarray(base + 0.1 * rng.standard_normal((32, 24))
+                          .astype(np.float32)) for _ in range(3)]
+    avg_b, res_b, ratio_b = fedttd_roundtrip(deltas, cfg, plan="batched")
+    avg_s, res_s, ratio_s = fedttd_roundtrip(deltas, cfg, plan="serial")
+    np.testing.assert_allclose(np.asarray(avg_b), np.asarray(avg_s),
+                               atol=1e-5)
+    for rb_, rs_ in zip(res_b, res_s):
+        np.testing.assert_allclose(np.asarray(rb_), np.asarray(rs_),
+                                   atol=1e-5)
+    assert ratio_b == pytest.approx(ratio_s)

@@ -129,7 +129,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.core.comm_compress import CommCompressionConfig, pod_sync_tt
 
-mesh = jax.make_mesh((2,), ('pod',), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2,), ('pod',))
 cfg = CommCompressionConfig(eps=0.05, max_rank=32)
 rng = np.random.default_rng(0)
 lr = rng.standard_normal((64, 8)) @ rng.standard_normal((8, 64))
@@ -165,10 +166,9 @@ os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=64'
 import json, jax
 import repro.launch.mesh as mesh_mod
 # shrink the production mesh for the test
-mesh_mod.make_production_mesh = lambda multi_pod=False: jax.make_mesh(
+mesh_mod.make_production_mesh = lambda multi_pod=False: mesh_mod.make_mesh(
     (2, 4, 8) if multi_pod else (8, 8),
-    ('pod', 'data', 'model') if multi_pod else ('data', 'model'),
-    axis_types=(jax.sharding.AxisType.Auto,) * (3 if multi_pod else 2))
+    ('pod', 'data', 'model') if multi_pod else ('data', 'model'))
 import repro.launch.dryrun as dr
 dr.make_production_mesh = mesh_mod.make_production_mesh
 res = dr.lower_cell('qwen1.5-0.5b', 'train_4k', multi_pod=True)
@@ -195,8 +195,8 @@ from repro.launch import sharding as shd
 from repro.models import mlp as mlp_mod
 from repro.models.registry import build
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ('data', 'model'))
 shd.set_mesh_axis_sizes(mesh)
 cfg = get_config('olmoe-1b-7b').reduced()      # 8 experts % model=4 == 0
 cfg = dataclasses.replace(cfg, fsdp=True)

@@ -8,12 +8,16 @@ import pytest
 from repro.kernels.block_update.ops import block_wy_update, wy_update_ref
 from repro.kernels.flash_attention.ops import mha_flash
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.frob_truncate.ops import delta_truncate, frob_truncate_ref
+from repro.kernels.frob_truncate.ops import (
+    delta_truncate, delta_truncate_batched, frob_truncate_ref,
+)
 from repro.kernels.householder.ops import (
-    build_t, panel_factor, panel_factor_ref, qr_blocked,
+    build_t, panel_factor, panel_factor_batched, panel_factor_ref,
+    qr_blocked,
 )
 from repro.kernels.singular_sort.ops import (
-    sort_singular_values, sorting_basis, sort_desc_ref,
+    sort_singular_values, sort_singular_values_batched, sorting_basis,
+    sort_desc_ref,
 )
 
 
@@ -66,6 +70,22 @@ def test_qr_blocked(rng, m, n, p):
         np.asarray(q).T @ np.asarray(q), np.eye(n), atol=5e-5
     )
     assert np.abs(np.tril(np.asarray(r), -1)).max() == 0
+
+
+@pytest.mark.parametrize("bsz,m,b", [(1, 64, 16), (5, 48, 16), (8, 96, 8)])
+def test_panel_factor_batched_matches_serial(rng, bsz, m, b):
+    """Batch grid dimension: member k of one launch == serial call k."""
+    a = jnp.asarray(rng.standard_normal((bsz, m, b)).astype(np.float32))
+    vb, tb, rb = panel_factor_batched(a)
+    assert vb.shape == (bsz, m, b) and tb.shape == (bsz, b)
+    for k in range(bsz):
+        v, t, r = panel_factor(a[k])
+        np.testing.assert_allclose(np.asarray(vb[k]), np.asarray(v),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(tb[k]), np.asarray(t),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(rb[k]), np.asarray(r),
+                                   atol=1e-6)
 
 
 def test_wy_identity_vs_explicit_product(rng):
@@ -126,6 +146,16 @@ def test_bitonic_sort_sweep(rng, n):
     assert sorted(np.asarray(idx).tolist()) == list(range(n))
 
 
+@pytest.mark.parametrize("bsz,n", [(1, 16), (4, 33), (6, 100)])
+def test_bitonic_sort_batched_matches_serial(rng, bsz, n):
+    s = jnp.asarray(np.abs(rng.standard_normal((bsz, n))).astype(np.float32))
+    sb, ib = sort_singular_values_batched(s)
+    for k in range(bsz):
+        ss, ii = sort_singular_values(s[k])
+        np.testing.assert_array_equal(np.asarray(sb[k]), np.asarray(ss))
+        np.testing.assert_array_equal(np.asarray(ib[k]), np.asarray(ii))
+
+
 def test_sorting_basis_contract(rng):
     """Kernel sorting_basis must preserve U Σ V^T (paper Alg. 1 l.18-25)."""
     m, k, n = 10, 6, 8
@@ -153,3 +183,21 @@ def test_frob_truncate_sweep(rng, n, delta):
     np.testing.assert_allclose(np.asarray(tail), np.asarray(tail_r),
                                rtol=1e-6)
     assert int(rank) == int(rank_r)
+
+
+@pytest.mark.parametrize("bsz,n", [(1, 8), (3, 20), (5, 64)])
+def test_frob_truncate_batched_matches_serial(rng, bsz, n):
+    """Per-member δ budgets applied by one batch-grid launch."""
+    s = jnp.asarray(
+        np.sort(np.abs(rng.standard_normal((bsz, n))).astype(np.float32),
+                axis=1)[:, ::-1].copy()
+    )
+    deltas = jnp.asarray(
+        np.abs(rng.standard_normal(bsz)).astype(np.float32) + 0.1
+    )
+    tb, rb = delta_truncate_batched(s, deltas)
+    for k in range(bsz):
+        t, r = delta_truncate(s[k], deltas[k])
+        np.testing.assert_allclose(np.asarray(tb[k]), np.asarray(t),
+                                   rtol=1e-6)
+        assert int(rb[k]) == int(r)

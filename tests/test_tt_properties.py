@@ -3,6 +3,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# hypothesis ships in the [test] extra; skip (never break collection) when
+# running against a bare runtime install
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.core as core
