@@ -9,6 +9,8 @@
   comm      Paper Fig. 1    — cross-pod TT-compressed sync payload
   roofline  §Roofline       — per-cell roofline table from the dry-run
   kernels   Pallas kernel block-shape sweeps vs ref oracles (quick)
+  tt_serve  TT-native serving — reconstruct-then-serve vs decode straight
+            from TT cores (tok/s + resident weight bytes)
 
 ``--fast`` propagates to every benchmark that accepts a ``fast=`` kwarg
 (smaller sweeps, single method) — the CI smoke lane that catches
@@ -62,6 +64,11 @@ def bench_kernels(fast: bool = False):
     kernel_bench.run(fast=fast)
 
 
+def bench_tt_serve(fast: bool = False):
+    from benchmarks import tt_serve
+    tt_serve.run(fast=fast)
+
+
 ALL = {
     "table1": bench_table1,
     "table3": bench_table3,
@@ -69,6 +76,7 @@ ALL = {
     "comm": bench_comm,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
+    "tt_serve": bench_tt_serve,
 }
 
 

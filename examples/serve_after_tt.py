@@ -1,10 +1,14 @@
-"""Fig. 1, receiving side: reconstruct TT-shipped weights, then serve.
+"""Fig. 1, receiving side — now TT-NATIVE: serve straight from the cores.
 
 An edge node receives model parameters in TT format (the compressed
-payload an aggregator broadcast), reconstructs them (eq. (1)/(2) chained
-contractions), and serves batched decode requests with a KV cache —
-demonstrating that TTD decoding slots in front of the serving path with
-bounded reconstruction error.
+payload an aggregator broadcast) and serves batched decode requests
+WITHOUT reconstructing the dense weights: layer matmuls contract the
+activations directly against the TT cores (``models.common.tt_native_params``
+→ ``core/tt_linear`` → the fused ``kernels/tt_contract`` chain).  The
+original reconstruct-then-serve path (eq. (1)/(2) chained contractions,
+then dense matmuls) is kept as the accuracy ORACLE: both paths contract
+the same cores in the same order, so their logits must agree to numerical
+precision — asserted below, far inside the compression ε bound.
 
 Run:  PYTHONPATH=src python examples/serve_after_tt.py
 """
@@ -19,20 +23,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import CompressionPolicy, TTCompressor
+from repro.core import (
+    CompressionPolicy, TTCompressor, spectral_decay_pytree, tt_param_bytes,
+)
 from repro.launch.mesh import make_host_mesh
+from repro.models import common as model_common
 from repro.models.registry import build
-
-
-def _pretend_trained(p: jax.Array, alpha: float = 1.0) -> jax.Array:
-    """Reshape a ≥2D param's spectrum to s_i ∝ i^-alpha (trained-net-like)."""
-    if p.ndim < 2 or p.size < 8192:
-        return p
-    mat = np.asarray(p, np.float32).reshape(p.shape[0], -1)
-    u, s, vt = np.linalg.svd(mat, full_matrices=False)
-    target = s[0] * (np.arange(1, s.size + 1.0) ** -alpha)
-    out = (u * target) @ vt
-    return jnp.asarray(out.reshape(p.shape), p.dtype)
 
 
 def main() -> None:
@@ -43,69 +39,86 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--eps", type=float, default=0.2)
     args = ap.parse_args()
+    with make_host_mesh():          # works on every supported jax version
+        _demo(args)
 
+
+def _demo(args) -> None:
     cfg = get_config(args.arch).reduced()
     model = build(cfg)
-    mesh = make_host_mesh()
-    jax.set_mesh(mesh)
     rng = np.random.default_rng(0)
 
     # --- sender: compress trained-ish params into the TT payload ----------
     # random init has a flat spectrum (incompressible by design — the
     # policy correctly refuses); impose the power-law spectral decay of
     # trained weights so the demo exercises the TT path.
-    params = jax.tree.map(_pretend_trained, model.init(jax.random.PRNGKey(0)))
+    params = spectral_decay_pytree(model.init(jax.random.PRNGKey(0)))
     comp = TTCompressor(CompressionPolicy(eps=args.eps, min_size=8192))
     payload, report = comp.compress(params)
     print(f"[serve] wire payload: {report.total_params:,} -> "
           f"{report.payload_params:,} params ({report.ratio:.2f}x)")
 
-    # --- receiver: reconstruct and serve ----------------------------------
+    # --- receiver: TT-native serving params (no dense materialization) ----
+    t0 = time.time()
+    params_tt = model_common.tt_native_params(payload)
+    print(f"[serve] TT-native conversion (lead tables only) in "
+          f"{time.time() - t0:.2f}s")
+    # the oracle still reconstructs (eq. 1/2) — the path TT-native replaces
     t0 = time.time()
     params_rx = comp.decompress(payload)
-    print(f"[serve] TT decode (eq. 1/2 contractions) in "
+    print(f"[serve] oracle reconstruct (eq. 1/2 contractions) in "
           f"{time.time() - t0:.2f}s")
+    print(f"[serve] resident weight bytes: dense {tt_param_bytes(params_rx):,}"
+          f" -> tt-native {tt_param_bytes(params_tt):,}")
+    # ε accuracy oracle: compression error vs the ORIGINAL weights must obey
+    # the per-tensor TT-SVD guarantee ||W - W_R||_F <= ε||W||_F
     errs = [
-        float(jnp.linalg.norm(a - b) / (jnp.linalg.norm(b) + 1e-9))
-        for a, b in zip(jax.tree.leaves(params_rx), jax.tree.leaves(params))
+        float(jnp.linalg.norm((a - o).astype(jnp.float32))
+              / (jnp.linalg.norm(o.astype(jnp.float32)) + 1e-9))
+        for a, o in zip(jax.tree.leaves(params_rx), jax.tree.leaves(params))
     ]
     print(f"[serve] max per-tensor reconstruction rel_err: {max(errs):.4f} "
           f"(ε={args.eps})")
+    assert max(errs) <= args.eps * 1.05 + 1e-2, (max(errs), args.eps)
+
+    # one decode protocol for every pass: the launcher's own loop
+    from repro.launch.serve import _decode_loop
 
     b = args.batch
     max_len = args.prompt_len + args.gen
-    cache = model.init_cache(b, max_len)
     decode = jax.jit(model.decode_step, donate_argnums=(1,))
     prompts = rng.integers(0, cfg.vocab_size, (b, args.prompt_len), np.int32)
 
-    logits = None
-    t0 = time.time()
-    for i in range(args.prompt_len):
-        logits, cache = decode(params_rx, cache,
-                               jnp.asarray(prompts[:, i:i + 1]))
-    logits_prompt_tt = logits            # position-aligned comparison point
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    toks = [np.asarray(tok)]
-    for _ in range(args.gen - 1):
-        logits, cache = decode(params_rx, cache, tok)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        toks.append(np.asarray(tok))
-    jax.block_until_ready(logits)
-    dt = time.time() - t0
-    gen = np.concatenate(toks, axis=1)
-    print(f"[serve] {b} requests × {args.gen} tokens in {dt:.1f}s "
+    run = _decode_loop(decode, params_tt, model.init_cache(b, max_len),
+                       prompts, args.gen)
+    dt = run["prefill_t"] + run["decode_t"]
+    print(f"[serve] {b} requests × {args.gen} tokens TT-native in {dt:.1f}s "
           f"({b * args.gen / dt:.1f} tok/s on CPU)")
 
-    # greedy decode with original vs reconstructed params should mostly agree
-    cache2 = model.init_cache(b, max_len)
-    logits2 = None
-    for i in range(args.prompt_len):
-        logits2, cache2 = decode(params, cache2,
-                                 jnp.asarray(prompts[:, i:i + 1]))
-    agree = float(jnp.mean(
-        (jnp.argmax(logits_prompt_tt, -1) == jnp.argmax(logits2, -1)).astype(
-            jnp.float32)))
-    print(f"[serve] next-token agreement (TT vs dense weights): {agree:.2%}")
+    # --- oracle: reconstruct-then-serve must match to numerical precision -
+    # (gen=1: only the position-aligned post-prompt logits are compared)
+    oracle = _decode_loop(decode, params_rx, model.init_cache(b, max_len),
+                          prompts, 1)
+    diff, scale, agree = model_common.logit_parity(
+        run["prompt_logits"], oracle["prompt_logits"]
+    )
+    print(f"[serve] TT-native vs reconstruct oracle: max|Δlogits| {diff:.2e} "
+          f"(scale {scale:.2e}), next-token agreement {agree:.2%}")
+    # same cores, same contraction order — only rounding differs; this is
+    # orders of magnitude tighter than the ε accuracy budget.  (argmax
+    # agreement is printed, not asserted: a near-tie can legitimately flip
+    # within the rounding tolerance)
+    assert diff <= max(0.05 * scale, 1e-3), (diff, scale)
+
+    # greedy decode with the ORIGINAL dense weights should mostly agree —
+    # this one is ε-limited (not rounding-limited), so report, don't assert
+    orig = _decode_loop(decode, params, model.init_cache(b, max_len),
+                        prompts, 1)
+    _, _, agree_orig = model_common.logit_parity(
+        run["prompt_logits"], orig["prompt_logits"]
+    )
+    print(f"[serve] next-token agreement (TT vs original dense weights): "
+          f"{agree_orig:.2%}")
     print("[serve] OK")
 
 

@@ -48,6 +48,137 @@ def _key_str(k) -> str:
     return str(k)
 
 
+# ---------------------------------------------------------------------------
+# TT payload checkpointing (compressed wire format, Fig. 1 edge→cloud)
+# ---------------------------------------------------------------------------
+#
+# A TTCompressor payload is a params-shaped pytree of CompressedParam
+# leaves; saving it instead of the dense state keeps the checkpoint at the
+# compressed size AND lets the serving side restore straight into TT-native
+# mode (``models.common.tt_native_params``) without ever holding the dense
+# weights.  Layout: one directory with
+#     tt_manifest.json  — per-leaf kind/shape/dtype/ranks/eps/crop metadata
+#     tt_payload.npz    — raw leaves + TT cores (cores keep their dtype)
+#     _COMMITTED        — atomic commit marker
+
+def save_tt_payload(directory: str, payload, extra: Optional[Dict] = None
+                    ) -> str:
+    """Serialize a TTCompressor payload (CompressedParam pytree)."""
+    from repro.core.compression import CompressedParam
+
+    def is_cp(x):
+        return isinstance(x, CompressedParam)
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(payload, is_leaf=is_cp)
+    arrays: Dict[str, np.ndarray] = {}
+    leaves = []
+    for path, c in flat:
+        name = "/".join(_key_str(k) for k in path) or "_root"
+        if not is_cp(c):
+            raise TypeError(f"{name}: not a CompressedParam leaf: {type(c)}")
+        key = name.replace("/", "__")
+        meta = {
+            "name": name,
+            "kind": c.kind,
+            "orig_shape": list(c.orig_shape),
+            "orig_dtype": str(jax.numpy.dtype(c.orig_dtype)),
+            "crop_dims": list(c.crop_dims) if c.crop_dims else None,
+        }
+        if c.kind == "tt":
+            meta["tt"] = {
+                "shape": list(c.tt.shape),
+                "ranks": [int(r) for r in c.tt.ranks],
+                "eps": float(c.tt.eps),
+                "core_dtypes": [str(g.dtype) for g in c.tt.cores],
+            }
+            for k, g in enumerate(c.tt.cores):
+                arrays[f"{key}__core{k}"] = np.asarray(
+                    jax.device_get(g), np.float32
+                )
+        else:
+            # raw leaves round-trip through f32 (np lacks bf16/fp8 writers)
+            arrays[f"{key}__raw"] = np.asarray(
+                jax.device_get(jax.numpy.asarray(c.raw).astype(
+                    jax.numpy.float32))
+            )
+        leaves.append(meta)
+
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "tt_payload.npz"), **arrays)
+    manifest = {"time": time.time(), "leaves": leaves, "extra": extra or {}}
+    with open(os.path.join(tmp, "tt_manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+        f.write("ok")
+    # crash-safe swap: the previous committed payload is parked at .old (not
+    # deleted) until the new one is in place; load_tt_payload falls back to
+    # .old, so every crash window leaves at least one loadable payload
+    old = directory + ".old"
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    if os.path.exists(directory):
+        os.rename(directory, old)
+    os.rename(tmp, directory)
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    return directory
+
+
+def load_tt_payload(directory: str, like) -> Tuple[Any, Dict]:
+    """Restore a TT payload into the tree structure of ``like`` (the params
+    pytree the payload was compressed from, or any same-structure tree)."""
+    import jax.numpy as jnp
+
+    from repro.core.compression import CompressedParam
+    from repro.core.tt import TTTensor
+
+    if not os.path.exists(os.path.join(directory, "_COMMITTED")):
+        old = directory + ".old"        # interrupted save_tt_payload swap
+        if os.path.exists(os.path.join(old, "_COMMITTED")):
+            directory = old
+        else:
+            raise FileNotFoundError(f"no committed TT payload in {directory}")
+    with open(os.path.join(directory, "tt_manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(directory, "tt_payload.npz"))
+
+    named, treedef = _flatten_with_names(like)
+    by_name = {m["name"]: m for m in manifest["leaves"]}
+    missing = set(by_name) ^ {n for n, _ in named}
+    if missing:   # leaves resolve by name, so ordering differences are fine
+        raise ValueError(f"payload/tree structure mismatch: {sorted(missing)}")
+
+    leaves = []
+    for name, _ in named:
+        m = by_name[name]
+        key = name.replace("/", "__")
+        dtype = jnp.dtype(m["orig_dtype"])
+        crop = tuple(m["crop_dims"]) if m.get("crop_dims") else None
+        if m["kind"] == "tt":
+            cores = [
+                jnp.asarray(data[f"{key}__core{k}"], jnp.dtype(cd))
+                for k, cd in enumerate(m["tt"]["core_dtypes"])
+            ]
+            tt = TTTensor(
+                cores=cores, shape=tuple(m["tt"]["shape"]),
+                ranks=tuple(m["tt"]["ranks"]), eps=m["tt"]["eps"],
+            )
+            leaves.append(CompressedParam(
+                "tt", tt, None, tuple(m["orig_shape"]), dtype,
+                crop_dims=crop,
+            ))
+        else:
+            raw = jnp.asarray(data[f"{key}__raw"]).astype(dtype)
+            leaves.append(CompressedParam(
+                "raw", None, raw, tuple(m["orig_shape"]), dtype,
+                crop_dims=crop,
+            ))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
         self.dir = directory

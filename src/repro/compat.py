@@ -1,0 +1,55 @@
+"""jax-version compatibility shims — single source of truth.
+
+The repo supports jax from 0.4.35 (the pinned container toolchain) through
+current releases; three API moves land in that range and were previously
+shimmed ad hoc at each call site (``models/mlp.py``, ``core/comm_compress.py``,
+``launch/mesh.py``).  They live here now so a fourth caller can never drift:
+
+  * ``shard_map``  — top-level ``jax.shard_map`` (+ ``check_vma``) vs
+                     ``jax.experimental.shard_map`` (+ ``check_rep``);
+  * ``pvary``      — explicit axis-varying marking (newer jax requires it
+                     inside shard_map bodies; older jax has no such concept);
+  * ``make_mesh``  — ``jax.make_mesh`` with Auto axis types where
+                     ``jax.sharding.AxisType`` exists (post-0.4.37), plain
+                     Auto meshes before explicit-sharding mode.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(body, mesh, in_specs, out_specs):
+    """``jax.shard_map`` (with VMA checking off) across jax versions: the
+    top-level entry + ``check_vma`` landed after 0.4.x, where the API lives
+    in ``jax.experimental.shard_map`` and the flag is ``check_rep``."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm_old
+    return sm_old(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` where it exists (newer jax: values produced inside a
+    shard_map body must be marked varying over the axes they'll reduce
+    over); identity on older jax, which has no VMA tracking."""
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is not None:
+        return fn(x, tuple(axis_names))
+    return x
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the installed jax
+    supports them (``jax.sharding.AxisType`` landed after 0.4.37; older
+    jaxlibs predate explicit-sharding mode entirely, so plain Auto meshes
+    are the correct fallback)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)

@@ -9,6 +9,8 @@ Public surface:
   tt.tt_reconstruct                — eq. (1)/(2) decoding
   baselines.tucker_hosvd / tr_svd  — Table-I comparison methods
   compression.TTCompressor         — pytree-level model compression API
+  tt_linear.TTLinear / tt_apply    — TT-native serving: apply dense layers
+                                     straight from cores (no reconstruction)
   comm_compress.*                  — FedTTD cross-pod TT-compressed sync
   blocked.*                        — WY-blocked HBD (beyond-paper, MXU form)
   plan.build_plan                  — batched-compression planning pass
@@ -59,6 +61,15 @@ from repro.core.compression import (
     TTCompressor,
     compress_param,
     decompress_param,
+)
+from repro.core.tt_linear import (
+    TTLinear,
+    is_tt_linear,
+    select_layer,
+    spectral_decay_pytree,
+    tt_apply,
+    tt_linear_from_tt,
+    tt_param_bytes,
 )
 from repro.core.comm_compress import (
     CommCompressionConfig,

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core import tt as _tt
 
 
@@ -108,10 +109,8 @@ def pod_sync_tt(
             acc = acc.reshape(-1, r) @ g.reshape(r, -1)
         return acc.reshape(delta.shape)
 
-    init = jnp.zeros(delta.shape, jnp.float32)
-    pvary = getattr(jax.lax, "pvary", None)
-    if pvary is not None:            # newer jax: mark axis-varying explicitly
-        init = pvary(init, (axis_name,))
+    # newer jax: mark the accumulator axis-varying explicitly (no-op on old)
+    init = compat.pvary(jnp.zeros(delta.shape, jnp.float32), (axis_name,))
     total = jax.lax.fori_loop(0, n_pods, lambda p, s: s + rec_one(p), init)
     avg = (total / n_pods).astype(delta.dtype)
     return avg, resid

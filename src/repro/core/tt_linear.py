@@ -1,0 +1,228 @@
+"""TTLinear — apply a dense layer straight from its TT cores.
+
+The paper's Fig. 1 receiving node reconstructs TT-shipped weights (eq.
+(1)/(2) chained contractions) and then serves.  But those contractions ARE a
+factored matmul: instead of materializing W = G_1 ×₁ … ×₁ G_N once
+(O(∏ n_k) bytes resident for the model's lifetime), the forward pass can
+contract the activation through the cores per token — the TT-layer
+formulation of Novikov et al. (surveyed in Liu & Parhi, arXiv 2304.13539)
+and the storage/bandwidth-bound serving mode of the TT-LLM accelerator work
+(arXiv 2501.19135).  On memory-bound decode, weight bytes *are* the decode
+latency, so shipping cores instead of dense weights is both the memory and
+the speed win.
+
+Representation
+--------------
+A ``TTLinear`` wraps one (optionally layer-stacked) weight:
+
+  * ``lead``  — ``(L, r_s)`` per-layer boundary vectors: the layer-stack
+                modes of the joint TT contracted at every concrete layer
+                index (host-side, at conversion).  ``None`` for unstacked
+                weights.  Inside a ``lax.scan`` over layers, selecting
+                ``lead[l]`` is a tiny gather — the *shared* in/out cores
+                stay closure constants, so HLO size remains depth-
+                independent and cores are never duplicated per layer.
+  * ``cores`` — the remaining input/output cores, shared by every layer.
+  * ``split`` — how many of ``cores`` are input cores (contracted against
+                the activation); the rest expand the output modes.
+
+``tt_apply`` runs the lead-absorbed chain through the fused Pallas kernels
+(``kernels/tt_contract``), falling back to the einsum chain for deep TTs.
+Because the contraction order matches ``tt_reconstruct`` exactly, TT-native
+logits equal reconstruct-then-serve logits to numerical precision — well
+inside the compression ε bound.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tt as _tt
+
+
+@dataclass
+class TTLinear:
+    lead: Optional[jax.Array]        # (L, r_s) stacked | (r_s,) selected | None
+    cores: List[jax.Array]           # [g (r,n,s), ...]; cores[0] r == r_s
+    split: int                       # number of input cores
+    in_shape: Tuple[int, ...]        # dense-weight input dims, e.g. (D,)
+    out_shape: Tuple[int, ...]       # dense-weight output dims, e.g. (H, K)
+    dtype: Any = jnp.bfloat16        # activation dtype of the dense original
+
+    @property
+    def num_layers(self) -> Optional[int]:
+        if self.lead is not None and self.lead.ndim == 2:
+            return int(self.lead.shape[0])
+        return None
+
+    @property
+    def payload_params(self) -> int:
+        n = sum(int(np.prod(c.shape)) for c in self.cores)
+        if self.lead is not None:
+            n += int(np.prod(self.lead.shape))
+        return n
+
+
+def _ttl_flatten(t: TTLinear):
+    return (
+        (t.lead, t.cores),
+        (t.split, t.in_shape, t.out_shape, jnp.dtype(t.dtype).name),
+    )
+
+
+def _ttl_unflatten(aux, kids):
+    split, in_shape, out_shape, dtype = aux
+    return TTLinear(
+        lead=kids[0], cores=kids[1], split=split,
+        in_shape=in_shape, out_shape=out_shape, dtype=jnp.dtype(dtype),
+    )
+
+
+jax.tree_util.register_pytree_node(TTLinear, _ttl_flatten, _ttl_unflatten)
+
+
+def is_tt_linear(x) -> bool:
+    return isinstance(x, TTLinear)
+
+
+def select_layer(t: TTLinear, idx) -> TTLinear:
+    """Layer ``idx``'s view of a stacked TTLinear: gather its lead vector
+    (``idx`` may be traced — this is what runs inside the layer scan);
+    cores are shared and pass through untouched."""
+    if t.lead is None or t.lead.ndim == 1:
+        return t
+    return TTLinear(
+        lead=jnp.take(t.lead, idx, axis=0), cores=t.cores, split=t.split,
+        in_shape=t.in_shape, out_shape=t.out_shape, dtype=t.dtype,
+    )
+
+
+def tt_apply(x: jax.Array, t: TTLinear) -> jax.Array:
+    """y = x · W from cores alone; x (..., *in_shape) → (..., *out_shape)."""
+    assert t.lead is None or t.lead.ndim == 1, (
+        "stacked TTLinear: select_layer() before apply"
+    )
+    nin = len(t.in_shape)
+    assert x.shape[x.ndim - nin:] == tuple(t.in_shape), (x.shape, t.in_shape)
+    batch = x.shape[: x.ndim - nin]
+    x2 = x.reshape(int(np.prod(batch or (1,))), -1)
+
+    g0 = t.cores[0]                                   # (r_s, n_1, r_1)
+    if t.lead is not None:
+        g0 = jnp.einsum(
+            "r,rns->ns", t.lead.astype(jnp.float32), g0.astype(jnp.float32)
+        )
+    else:
+        assert g0.shape[0] == 1, g0.shape
+        g0 = g0[0]
+    chain = [g0] + list(t.cores[1:])
+
+    from repro.kernels.tt_contract.ops import tt_contract  # lazy: no cycle
+    y2 = tt_contract(x2, chain, split=t.split)
+    return y2.reshape(*batch, *t.out_shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Conversion: TTCompressor payload (whole stacked tensor) → TTLinear
+# ---------------------------------------------------------------------------
+
+def _group_dims(tt_dims: Sequence[int], orig_shape: Sequence[int]):
+    """Partition the tensorized dims into per-original-axis groups (greedy
+    prefix products).  Returns group sizes or None when the dims are not a
+    per-axis concatenation (e.g. padded bucket members)."""
+    groups, i = [], 0
+    for n in orig_shape:
+        prod, start = 1, i
+        while prod < n and i < len(tt_dims):
+            prod *= tt_dims[i]
+            i += 1
+        if prod != n:
+            return None
+        groups.append(i - start)
+    return groups if i == len(tt_dims) else None
+
+
+def tt_linear_from_tt(
+    tt: _tt.TTTensor,
+    orig_shape: Sequence[int],
+    stack: int,
+    in_ndim: int,
+    dtype=jnp.bfloat16,
+    core_dtype=jnp.float32,
+) -> Optional[TTLinear]:
+    """Build a TTLinear from a whole-tensor TT of a (stacked) dense weight.
+
+    orig_shape = (*stack_dims, *in_dims, *out_dims); ``stack`` leading axes
+    are layer-stack modes (0 for unstacked), the next ``in_ndim`` axes are
+    the matmul input.  The stack modes are contracted at every concrete
+    layer index on the host, yielding the ``(L, r_s)`` lead table; in/out
+    cores are shared across layers.  Returns None when the TT's dims don't
+    map cleanly onto the axes (padded members) — caller falls back to
+    reconstruction.
+
+    core_dtype: storage dtype of the resident cores.  The contraction
+    upcasts to f32 regardless; bf16 storage rounds the cores exactly like
+    reconstruct-then-serve rounds the dense matrix, at half the bytes.
+    """
+    groups = _group_dims(tt.shape, orig_shape)
+    if groups is None:
+        return None
+    ns = sum(groups[:stack])                          # cores in the stack part
+    split = sum(groups[stack: stack + in_ndim])
+    if split < 1 or len(tt.cores) - ns - split < 1:
+        return None                  # need ≥1 input core and ≥1 output core
+
+    lead = None
+    cores = [jnp.asarray(c, jnp.float32) for c in tt.cores]
+    if ns > 0:
+        # prefix-reconstruct the stack modes: (1,n_1,r_1) ×₁ … → (L, r_s)
+        acc = cores[0].reshape(-1, cores[0].shape[2])  # (n_1, r_1)
+        for k in range(1, ns):
+            r, n, s = cores[k].shape
+            acc = (acc @ cores[k].reshape(r, n * s)).reshape(-1, s)
+        lead = acc                                    # (L, r_s)
+        cores = cores[ns:]
+    cd = jnp.dtype(core_dtype)
+    return TTLinear(
+        lead=None if lead is None else lead.astype(cd),
+        cores=[c.astype(cd) for c in cores], split=split,
+        in_shape=tuple(orig_shape[stack: stack + in_ndim]),
+        out_shape=tuple(orig_shape[stack + in_ndim:]),
+        dtype=dtype,
+    )
+
+
+def tt_param_bytes(tree) -> int:
+    """Resident weight bytes of a params pytree: TT leaves count their
+    cores+lead payload, dense leaves their full array."""
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_tt_linear):
+        if is_tt_linear(leaf):
+            total += sum(int(c.size) * c.dtype.itemsize for c in leaf.cores)
+            if leaf.lead is not None:
+                total += int(leaf.lead.size) * leaf.lead.dtype.itemsize
+        else:
+            total += int(leaf.size) * leaf.dtype.itemsize
+    return total
+
+
+def spectral_decay_pytree(params, alpha: float = 1.0, min_size: int = 8192):
+    """Impose a power-law singular spectrum (σ_i ∝ i^-α) on every big ≥2-D
+    leaf.  Random init has a flat spectrum — incompressible by design, and
+    the TT policy correctly refuses it; trained nets decay.  Demo/benchmark
+    helper for exercising the TT serving path on synthetic weights."""
+    def one(p):
+        if p.ndim < 2 or p.size < min_size:
+            return p
+        mat = np.asarray(jax.device_get(p), np.float32).reshape(-1, p.shape[-1])
+        u, s, vt = np.linalg.svd(mat, full_matrices=False)
+        target = s[0] * (np.arange(1, s.size + 1.0) ** -alpha)
+        out = (u * target) @ vt
+        return jnp.asarray(out.reshape(p.shape), p.dtype)
+
+    return jax.tree.map(one, params)

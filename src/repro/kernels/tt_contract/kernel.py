@@ -1,0 +1,129 @@
+"""Fused TT-contraction Pallas kernels — the TT-native serving hot path.
+
+A TT-compressed layer weight applied to activations is a short chain of
+small matmuls (eq. (1)/(2) contractions with the activation folded in).
+Unfused, every intermediate ``(B, ·)`` tensor round-trips through HBM and
+each hop is a separate dispatch; fused, the whole chain runs out of one
+VMEM residency per activation tile — decode-sized batches are latency-bound
+on exactly that.
+
+Two bodies cover the shapes the model zoo produces (``tensorize_dims``
+keeps ≥3-D stacked layer weights mode-per-axis, so after the layer index is
+absorbed a (L,D,F) MLP weight is a 2-core chain and (L,D,H,K)/(L,H,K,D)
+attention weights are 3-core chains):
+
+  * ``tt_contract_2`` — y = (x @ g0) @ g1
+  * ``tt_contract_3`` — 3-core chain, input/output structure selected by
+    ``split`` (1 = one input core, 2 = two input cores)
+
+Cores sit whole in VMEM (they are the *compressed* payload — KBs); the
+grid tiles the token dimension.  Deeper chains fall back to the jnp oracle
+(``ref.py``) in ``ops.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dot(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _tt2_kernel(x_ref, g0_ref, g1_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    t = _dot(x, g0_ref[...])                              # (bb, r1)   MXU
+    o_ref[...] = _dot(t, g1_ref[...])                     # (bb, n2)   MXU
+
+
+def _tt3_kernel(x_ref, g0_ref, g1_ref, g2_ref, o_ref, *, split, n_mid, bb):
+    """3-core chain on one (bb, N_in) activation tile.
+
+    split=1: x (bb,n1) · g0 (n1,r1) · g1 (r1,n2·r2) · g2 (r2,n3)
+             — expand path: t (bb,n2·r2) reshapes to (bb·n2, r2) rows.
+    split=2: x (bb,n1·n2) · g0 (n1,r1) · g1 (n2·r1,r2) · g2 (r2,n3)
+             — contract path: x transposes so the major input mode hits
+             the MXU as the contracting dim; g1 is pre-permuted to
+             (n2, r1, r2) row-major by ops.py.
+    """
+    x = x_ref[...].astype(jnp.float32)
+    g0, g1, g2 = g0_ref[...], g1_ref[...], g2_ref[...]
+    if split == 1:
+        t = _dot(x, g0)                                   # (bb, r1)
+        t = _dot(t, g1)                                   # (bb, n2*r2)
+        r2 = g2.shape[0]
+        t = t.reshape(bb * n_mid, r2)
+        y = _dot(t, g2)                                   # (bb*n2, n3)
+        o_ref[...] = y.reshape(bb, n_mid * g2.shape[1])
+    else:
+        n1 = g0.shape[0]
+        x3 = x.reshape(bb, n1, n_mid)
+        x3 = x3.transpose(0, 2, 1).reshape(bb * n_mid, n1)
+        t = _dot(x3, g0)                                  # (bb*n2, r1)
+        t = t.reshape(bb, n_mid * g0.shape[1])
+        t = _dot(t, g1)                                   # (bb, r2)
+        o_ref[...] = _dot(t, g2)                          # (bb, n3)
+
+
+def _grid_1d(b: int, cap: int = 512):
+    """Token-dim tile: first of (cap, cap/2, cap/4) that divides b, else the
+    whole batch in one block.  ops.py gates kernel eligibility on the VMEM
+    footprint of the tile THIS returns, so an indivisible huge batch (whole-b
+    block) falls back to the unfused chain instead of blowing VMEM."""
+    for t in (cap, cap // 2, cap // 4):
+        if b > t and b % t == 0:
+            return t
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tt_contract_2(x, g0, g1, interpret: bool = False):
+    """(B, n1) · (n1, r1) · (r1, n2) → (B, n2), one launch."""
+    b, n1 = x.shape
+    n2 = g1.shape[1]
+    bb = _grid_1d(b)
+    return pl.pallas_call(
+        _tt2_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, n1), lambda i: (i, 0)),
+            pl.BlockSpec(g0.shape, lambda i: (0, 0)),
+            pl.BlockSpec(g1.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n2), jnp.float32),
+        interpret=interpret,
+    )(x, g0.astype(jnp.float32), g1.astype(jnp.float32))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("split", "n_mid", "n_out", "interpret")
+)
+def tt_contract_3(x, g0, g1, g2, *, split: int, n_mid: int, n_out: int,
+                  interpret: bool = False):
+    """Fused 3-core chain; ``g1`` comes pre-flattened 2D from ops.py."""
+    b, n_in = x.shape
+    bb = _grid_1d(b)
+    kern = functools.partial(_tt3_kernel, split=split, n_mid=n_mid, bb=bb)
+    return pl.pallas_call(
+        kern,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, n_in), lambda i: (i, 0)),
+            pl.BlockSpec(g0.shape, lambda i: (0, 0)),
+            pl.BlockSpec(g1.shape, lambda i: (0, 0)),
+            pl.BlockSpec(g2.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_out), jnp.float32),
+        interpret=interpret,
+    )(
+        x,
+        g0.astype(jnp.float32),
+        g1.astype(jnp.float32),
+        g2.astype(jnp.float32),
+    )

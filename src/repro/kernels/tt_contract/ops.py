@@ -1,0 +1,79 @@
+"""Dispatch wrapper for the fused TT-contraction kernels.
+
+``tt_contract`` takes the lead-absorbed chain (see ``ref.py`` for the
+representation) and picks the execution path:
+
+  * depth 2 (split 1)      → fused ``tt_contract_2``
+  * depth 3 (split 1 or 2) → fused ``tt_contract_3``
+  * anything else, or chains whose operands would blow the VMEM budget
+                           → the jnp einsum chain (``tt_contract_ref``),
+                             still unmaterialized, just unfused
+
+All paths return float32 — callers (``core/tt_linear.tt_apply``) cast back
+to the activation dtype after the chain, matching how the dense path's
+einsums accumulate.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.tt_contract import kernel as _kernel
+from repro.kernels.tt_contract.ref import tt_contract_ref, tt_dense_ref
+
+
+def _fits_vmem(x2, cores, n_out: int) -> bool:
+    """f32 bytes of one grid step at the tile _grid_1d will actually pick
+    (activation tile in + out, cores fully resident)."""
+    bb = _kernel._grid_1d(x2.shape[0])
+    ops_bytes = 4 * (bb * (x2.shape[1] + n_out)
+                     + sum(int(g.size) for g in cores))
+    return ops_bytes < common.VMEM_BUDGET // 2
+
+
+def tt_contract(
+    x2: jax.Array,                  # (B, N_in)
+    cores: Sequence[jax.Array],     # [g0 (n1,r1), g_k (r,n,s)..., last s==1]
+    split: int,
+    interpret: bool | None = None,
+) -> jax.Array:                     # (B, N_out) float32
+    """Contract activations straight through TT cores (no dense weight)."""
+    if interpret is None:
+        interpret = common.use_interpret()
+    depth = len(cores)
+    x2 = x2.astype(jnp.float32)
+    n_out = 1
+    for g in cores[split:]:
+        n_out *= g.shape[1]
+
+    if depth == 2 and split == 1 and _fits_vmem(x2, cores, n_out):
+        g0, g1 = cores
+        return _kernel.tt_contract_2(
+            x2, g0, g1[:, :, 0] if g1.ndim == 3 else g1, interpret=interpret
+        )
+
+    if depth == 3 and split in (1, 2) and _fits_vmem(x2, cores, n_out):
+        g0, g1, g2 = cores
+        g2m = g2[:, :, 0] if g2.ndim == 3 else g2          # (r2, n3)
+        if split == 1:
+            r1, n2, r2 = g1.shape
+            g1f = g1.reshape(r1, n2 * r2)
+            return _kernel.tt_contract_3(
+                x2, g0, g1f, g2m, split=1, n_mid=n2,
+                n_out=n2 * g2m.shape[1], interpret=interpret,
+            )
+        r1, n2, r2 = g1.shape
+        g1p = g1.transpose(1, 0, 2).reshape(n2 * r1, r2)   # (n2·r1, r2)
+        return _kernel.tt_contract_3(
+            x2, g0, g1p, g2m, split=2, n_mid=n2,
+            n_out=g2m.shape[1], interpret=interpret,
+        )
+
+    return tt_contract_ref(x2, cores, split)
+
+
+__all__ = ["tt_contract", "tt_contract_ref", "tt_dense_ref"]

@@ -15,18 +15,12 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
+from repro import compat
+
 
 def make_mesh(shape, axes) -> Mesh:
-    """``jax.make_mesh`` with Auto axis types where the installed jax
-    supports them (``jax.sharding.AxisType`` landed after 0.4.37; older
-    jaxlibs predate explicit-sharding mode entirely, so plain Auto meshes
-    are the correct fallback)."""
-    axis_type = getattr(jax.sharding, "AxisType", None)
-    if axis_type is not None:
-        return jax.make_mesh(
-            shape, axes, axis_types=(axis_type.Auto,) * len(axes)
-        )
-    return jax.make_mesh(shape, axes)
+    """Auto-axis mesh across jax versions (shim: ``repro.compat``)."""
+    return compat.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -73,9 +73,10 @@ def init_attn(key, cfg, layers: Optional[int] = None) -> AttnParams:
 
 
 def qkv_project(x, p: AttnParams, cfg, positions):
-    q = jnp.einsum("bsd,dhk->bshk", x, p.wq)
-    k = jnp.einsum("bsd,dhk->bshk", x, p.wk)
-    v = jnp.einsum("bsd,dhk->bshk", x, p.wv)
+    # dense_apply dispatches raw arrays and TT payloads identically
+    q = common.dense_apply(x, p.wq)
+    k = common.dense_apply(x, p.wk)
+    v = common.dense_apply(x, p.wv)
     if p.bq is not None:
         q = q + p.bq
         k = k + p.bk

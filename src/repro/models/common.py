@@ -13,6 +13,7 @@ Conventions (used by every arch in the zoo):
 
 from __future__ import annotations
 
+import re
 from typing import Optional, Tuple
 
 import jax
@@ -79,6 +80,113 @@ def activate(x: jax.Array, act: str) -> jax.Array:
     if act == "relu":
         return jax.nn.relu(x)
     raise ValueError(f"unknown activation {act}")
+
+
+def dense_apply(x: jax.Array, w, in_ndim: int = 1) -> jax.Array:
+    """THE dense-weight application point: every matmul against a model
+    weight in the transformer stack routes through here, so a weight can be
+    either a raw array or a TT payload (``core/tt_linear.TTLinear``) without
+    the call sites knowing.
+
+    Raw ``w``: shape (*in_dims, *out_dims) with ``in_ndim`` leading input
+    axes; contracts x's trailing ``in_ndim`` axes against them (identical
+    lowering to the einsums this replaces — one dot_general).  TTLinear
+    ``w``: contracts the activation straight through the TT cores via the
+    fused ``kernels/tt_contract`` chain — the full dense matrix is never
+    materialized.
+    """
+    from repro.core import tt_linear as _ttl
+    if _ttl.is_tt_linear(w):
+        return _ttl.tt_apply(x, w)
+    cdims = (
+        tuple(range(x.ndim - in_ndim, x.ndim)),
+        tuple(range(in_ndim)),
+    )
+    return jax.lax.dot_general(x, w, (cdims, ((), ())))
+
+
+# TT-native serving eligibility: transformer-stack matmul weights, anchored
+# at the ``layers.`` tree root so the (scan-incompatible) encdec/ssm trees
+# never convert.  value = in_ndim (leading input axes after the layer stack).
+# MoE expert weights stay dense: their einsums batch over the expert axis,
+# which the TT chain has no slot for (they reconstruct on load instead).
+_TT_SERVE_RULES = [
+    (re.compile(r"^layers\.attn\.w[qkv]$"), 1),
+    (re.compile(r"^layers\.attn\.wo$"), 2),
+    (re.compile(r"^layers\.mlp\.w_(gate|up|down)$"), 1),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return ".".join(parts)
+
+
+def tt_native_params(compressed, core_dtype=None):
+    """TTCompressor payload → TT-native serving params.
+
+    Layer-stacked transformer matmul weights whose TT payload maps cleanly
+    onto the (stack, in, out) axes become ``TTLinear`` leaves — served
+    straight from cores.  Everything else (embeddings, norms, MoE experts,
+    raw-routed and padded params) reconstructs exactly as the Fig. 1
+    receiving node does today.  The result drops into ``decode_step`` /
+    ``forward`` unchanged; peak weight bytes shrink by the payload's
+    compression ratio on the converted leaves.
+
+    core_dtype: resident-core storage dtype; default None stores each
+    leaf's cores in its original weight dtype (bf16 for the zoo) — the
+    same rounding reconstruct-then-serve applies to the dense matrix.
+    """
+    from repro.core import compression as _comp
+    from repro.core import tt_linear as _ttl
+
+    def is_cp(x):
+        return isinstance(x, _comp.CompressedParam)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        compressed, is_leaf=is_cp
+    )
+    leaves = []
+    for path, c in flat:
+        leaf = None
+        if is_cp(c) and c.kind == "tt" and c.crop_dims is None:
+            name = _path_str(path)
+            for pat, in_ndim in _TT_SERVE_RULES:
+                if pat.search(name):
+                    leaf = _ttl.tt_linear_from_tt(
+                        c.tt, c.orig_shape, stack=1, in_ndim=in_ndim,
+                        dtype=c.orig_dtype,
+                        core_dtype=core_dtype or c.orig_dtype,
+                    )
+                    break
+        if leaf is None:
+            leaf = _comp.decompress_param(c) if is_cp(c) else c
+        leaves.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def logit_parity(a: jax.Array, b: jax.Array) -> Tuple[float, float, float]:
+    """(max|a−b|, |b| scale, argmax agreement) — the single tolerance
+    surface every TT-native-vs-reconstruct comparison (serve --verify,
+    benchmarks/tt_serve, examples, tests) shares.  The accepted bound for
+    same-cores comparisons is ``max_diff <= max(0.05 * scale, 1e-3)``:
+    both paths contract identical cores in identical order, so only
+    bf16-level rounding may differ."""
+    d = float(jnp.abs(a - b).max())
+    scale = float(jnp.abs(b).max()) + 1e-9
+    agree = float(jnp.mean(
+        (jnp.argmax(a, -1) == jnp.argmax(b, -1)).astype(jnp.float32)
+    ))
+    return d, scale, agree
 
 
 def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):

@@ -15,20 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.models import common
-
-
-def _shard_map(body, mesh, in_specs, out_specs):
-    """``jax.shard_map`` (with VMA checking off) across jax versions: the
-    top-level entry + ``check_vma`` landed after 0.4.x, where the API lives
-    in ``jax.experimental.shard_map`` and the flag is ``check_rep``."""
-    sm = getattr(jax, "shard_map", None)
-    if sm is not None:
-        return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_vma=False)
-    from jax.experimental.shard_map import shard_map as sm_old
-    return sm_old(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_rep=False)
 
 
 class MLPParams(NamedTuple):
@@ -58,9 +46,11 @@ def init_mlp(key, cfg, d_ff: Optional[int] = None,
 
 
 def mlp_apply(x: jax.Array, p: MLPParams, act: str) -> jax.Array:
-    g = common.activate(jnp.einsum("bsd,df->bsf", x, p.w_gate), act)
-    u = jnp.einsum("bsd,df->bsf", x, p.w_up)
-    return jnp.einsum("bsf,fd->bsd", g * u, p.w_down)
+    """Gated FFN; weights may be raw arrays or TT payloads — every matmul
+    goes through the ``common.dense_apply`` dispatch point."""
+    g = common.activate(common.dense_apply(x, p.w_gate), act)
+    u = common.dense_apply(x, p.w_up)
+    return common.dense_apply(g * u, p.w_down)
 
 
 # ---------------------------------------------------------------------------
@@ -216,7 +206,7 @@ def moe_apply_a2a(x, p: MoEParams, cfg, capacity_factor: float = 1.25):
 
     bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0]
                                                     if batch_axes else None)
-    return _shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None),
                   P(f_ax, None),

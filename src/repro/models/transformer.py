@@ -23,6 +23,32 @@ from repro.models import common
 from repro.models import mlp as mlp_mod
 
 
+def _layers_have_tt(layers) -> bool:
+    from repro.core.tt_linear import is_tt_linear
+    return any(
+        is_tt_linear(leaf)
+        for leaf in jax.tree.leaves(layers, is_leaf=is_tt_linear)
+    )
+
+
+def _layer_at(layers, idx):
+    """Layer ``idx``'s params from the stacked tree (``idx`` may be traced).
+
+    Raw leaves gather their idx-th row — same dynamic-slice the scan's xs
+    mechanism would emit.  TTLinear leaves gather only their (L, r) lead
+    vector; the shared cores stay closure constants, so the TT-native scan
+    body keeps HLO size depth-independent without duplicating cores per
+    layer (the reason TT weights cannot ride in the scan's xs)."""
+    from repro.core.tt_linear import is_tt_linear, select_layer
+
+    def sel(leaf):
+        if is_tt_linear(leaf):
+            return select_layer(leaf, idx)
+        return jnp.take(leaf, idx, axis=0)
+
+    return jax.tree.map(sel, layers, is_leaf=is_tt_linear)
+
+
 class LayerParams(NamedTuple):
     attn: attn.AttnParams
     mlp: Optional[mlp_mod.MLPParams]
@@ -76,7 +102,7 @@ def _block(x, lp: LayerParams, is_global, cfg, positions, impl):
     o = attn.causal_attend(
         q, k, v, cfg, window=cfg.window, is_global=is_global, impl=impl
     )
-    x = x + jnp.einsum("bshk,hkd->bsd", o, lp.attn.wo)
+    x = x + common.dense_apply(o, lp.attn.wo, in_ndim=2)
     h = common.rms_norm(x, lp.ln2, cfg.norm_eps)
     if cfg.moe is not None:
         f = mlp_mod.moe_apply(h, lp.moe, cfg)
@@ -104,16 +130,27 @@ def forward(
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     flags = _layer_flags(cfg)
 
-    def body(h, scanned):
-        lp, is_global = scanned
-        fn = functools.partial(
-            _block, cfg=cfg, positions=positions, impl=impl
-        )
-        if cfg.remat:
-            fn = jax.checkpoint(fn)
-        return fn(h, lp, is_global), None
+    fn = functools.partial(_block, cfg=cfg, positions=positions, impl=impl)
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
 
-    x, _ = jax.lax.scan(body, x, (params.layers, flags))
+    if _layers_have_tt(params.layers):
+        # TT-native weights: scan over the layer INDEX and gather each
+        # layer's params inside the body (see _layer_at) — TT cores are
+        # shared closure constants the scan must not slice.
+        def body_tt(h, scanned):
+            idx, is_global = scanned
+            return fn(h, _layer_at(params.layers, idx), is_global), None
+
+        x, _ = jax.lax.scan(
+            body_tt, x, (jnp.arange(cfg.num_layers), flags)
+        )
+    else:
+        def body(h, scanned):
+            lp, is_global = scanned
+            return fn(h, lp, is_global), None
+
+        x, _ = jax.lax.scan(body, x, (params.layers, flags))
     return common.rms_norm(x, params.final_norm, cfg.norm_eps)
 
 
@@ -178,15 +215,14 @@ def decode_step(
     positions = jnp.broadcast_to(pos[None, None], (b, 1))
     flags = _layer_flags(cfg)
 
-    def body(h, scanned):
-        lp, is_global, k_c, v_c = scanned
+    def step(h, lp, is_global, k_c, v_c):
         hh = common.rms_norm(h, lp.ln1, cfg.norm_eps)
         q, k_new, v_new = attn.qkv_project(hh, lp.attn, cfg, positions)
         k_c, v_c = attn.cache_update(k_c, v_c, k_new, v_new, pos)
         o = attn.decode_attend(
             q, k_c, v_c, pos, cfg, window=cfg.window, is_global=is_global
         )
-        h = h + jnp.einsum("bshk,hkd->bsd", o, lp.attn.wo)
+        h = h + common.dense_apply(o, lp.attn.wo, in_ndim=2)
         hh = common.rms_norm(h, lp.ln2, cfg.norm_eps)
         if cfg.moe is not None:
             f = mlp_mod.moe_apply(hh, lp.moe, cfg)
@@ -194,9 +230,26 @@ def decode_step(
             f = mlp_mod.mlp_apply(hh, lp.mlp, cfg.act)
         return (h + f).astype(h.dtype), (k_c, v_c)
 
-    x, (k_all, v_all) = jax.lax.scan(
-        body, x, (params.layers, flags, cache.k, cache.v)
-    )
+    if _layers_have_tt(params.layers):
+        # TT-native decode: weights never leave TT form — the scan carries
+        # only the layer index; cores are closure constants (see _layer_at)
+        def body_tt(h, scanned):
+            idx, is_global, k_c, v_c = scanned
+            return step(h, _layer_at(params.layers, idx), is_global,
+                        k_c, v_c)
+
+        x, (k_all, v_all) = jax.lax.scan(
+            body_tt, x,
+            (jnp.arange(cfg.num_layers), flags, cache.k, cache.v),
+        )
+    else:
+        def body(h, scanned):
+            lp, is_global, k_c, v_c = scanned
+            return step(h, lp, is_global, k_c, v_c)
+
+        x, (k_all, v_all) = jax.lax.scan(
+            body, x, (params.layers, flags, cache.k, cache.v)
+        )
     hidden = common.rms_norm(x, params.final_norm, cfg.norm_eps)
     logits = logits_fn(params, hidden, cfg)
     return logits[:, 0, :], DecodeCache(k=k_all, v=v_all, pos=pos + 1)

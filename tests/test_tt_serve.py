@@ -1,0 +1,194 @@
+"""TT-native serving: TTLinear equivalence, decode parity, TT checkpoints."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionPolicy,
+    TTCompressor,
+    is_tt_linear,
+    select_layer,
+    spectral_decay_pytree,
+    tt_apply,
+    tt_linear_from_tt,
+    tt_param_bytes,
+    tt_reconstruct,
+    ttd,
+)
+from repro.models import common as model_common
+
+
+def _decayed(rng, shape, alpha=1.2):
+    w = rng.standard_normal(shape).astype(np.float32)
+    mat = w.reshape(-1, shape[-1])
+    u, s, vt = np.linalg.svd(mat, full_matrices=False)
+    target = s[0] * (np.arange(1, s.size + 1.0) ** -alpha)
+    return ((u * target) @ vt).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# TTLinear: per-layer apply == slice of the dense reconstruction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,in_ndim", [
+    ((3, 64, 96), 1),        # mlp-style  (L, D, F)
+    ((3, 64, 4, 16), 1),     # wq-style   (L, D, H, K)
+    ((3, 4, 16, 64), 2),     # wo-style   (L, H, K, D)
+])
+def test_tt_linear_matches_reconstruct(rng, shape, in_ndim):
+    w = _decayed(rng, shape)
+    tt = ttd(w, eps=0.05, dims=shape)
+    lin = tt_linear_from_tt(tt, shape, stack=1, in_ndim=in_ndim,
+                            dtype=jnp.float32)
+    assert lin is not None
+    w_rec = np.asarray(tt_reconstruct(tt))
+    in_shape = shape[1:1 + in_ndim]
+    x = jnp.asarray(rng.standard_normal((5, *in_shape)), jnp.float32)
+    for layer in range(shape[0]):
+        y = np.asarray(tt_apply(x, select_layer(lin, layer)))
+        wl = w_rec[layer].reshape(int(np.prod(in_shape)), -1)
+        y_ref = (np.asarray(x).reshape(5, -1) @ wl).reshape(y.shape)
+        scale = max(np.abs(y_ref).max(), 1e-6)
+        np.testing.assert_allclose(y, y_ref, atol=1e-4 * scale)
+
+
+def test_tt_linear_traced_layer_select(rng):
+    """select_layer under a traced index (the scan path) == concrete."""
+    shape = (4, 32, 48)
+    w = _decayed(rng, shape)
+    lin = tt_linear_from_tt(ttd(w, eps=0.1, dims=shape), shape, 1, 1,
+                            dtype=jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 32)), jnp.float32)
+
+    def one(idx):
+        return tt_apply(x, select_layer(lin, idx))
+
+    ys = jax.lax.map(one, jnp.arange(shape[0]))
+    for layer in range(shape[0]):
+        np.testing.assert_allclose(
+            np.asarray(ys[layer]), np.asarray(one(layer)), atol=1e-6
+        )
+
+
+def test_tt_linear_rejects_padded_dims(rng):
+    """Dims that aren't a per-axis concatenation → None (reconstruct)."""
+    w = _decayed(rng, (4, 32, 48))
+    tt = ttd(w.reshape(2, 2, 32, 48), eps=0.1)      # stack axis split in two
+    assert tt_linear_from_tt(tt, (5, 32, 48), stack=1, in_ndim=1) is None
+
+
+# ---------------------------------------------------------------------------
+# dense_apply dispatch
+# ---------------------------------------------------------------------------
+
+def test_dense_apply_raw_matches_einsum(rng):
+    x = jnp.asarray(rng.standard_normal((2, 3, 16)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((16, 4, 8)), jnp.bfloat16)
+    out = model_common.dense_apply(x, w, in_ndim=1)
+    ref = jnp.einsum("bsd,dhk->bshk", x, w)
+    assert out.dtype == ref.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=1e-2
+    )
+    o = jnp.asarray(rng.standard_normal((2, 3, 4, 8)), jnp.bfloat16)
+    wo = jnp.asarray(rng.standard_normal((4, 8, 16)), jnp.bfloat16)
+    out2 = model_common.dense_apply(o, wo, in_ndim=2)
+    ref2 = jnp.einsum("bshk,hkd->bsd", o, wo)
+    np.testing.assert_allclose(
+        np.asarray(out2, np.float32), np.asarray(ref2, np.float32), atol=1e-1
+    )
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: TT-native decode == reconstruct-then-serve decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_tt_native_decode_matches_reconstruct():
+    from repro.configs import get_config
+    from repro.models.registry import build
+
+    cfg = get_config("gemma3-1b").reduced()
+    model = build(cfg)
+    params = spectral_decay_pytree(model.init(jax.random.PRNGKey(0)))
+    comp = TTCompressor(CompressionPolicy(eps=0.2, min_size=8192))
+    payload, report = comp.compress(params)
+    assert report.ratio > 1.5
+
+    params_rx = comp.decompress(payload)
+    params_tt = model_common.tt_native_params(payload)
+    tt_leaves = [
+        leaf for leaf in jax.tree.leaves(params_tt, is_leaf=is_tt_linear)
+        if is_tt_linear(leaf)
+    ]
+    assert len(tt_leaves) == 7          # wq wk wv wo w_gate w_up w_down
+    assert tt_param_bytes(params_tt) < tt_param_bytes(params_rx)
+
+    rng = np.random.default_rng(0)
+    b, plen = 2, 6
+    prompts = rng.integers(0, cfg.vocab_size, (b, plen), np.int32)
+    decode = jax.jit(model.decode_step)
+    c1 = model.init_cache(b, plen)
+    c2 = model.init_cache(b, plen)
+    for i in range(plen):
+        tok = jnp.asarray(prompts[:, i:i + 1])
+        l1, c1 = decode(params_rx, c1, tok)
+        l2, c2 = decode(params_tt, c2, tok)
+    d, scale, _ = model_common.logit_parity(l2, l1)
+    # same cores, same contraction order — bf16 rounding only, far inside ε
+    assert d <= max(0.05 * scale, 1e-3), (d, scale)
+
+    # prefill/forward path takes the TT-aware scan too
+    p1 = model.prefill(params_rx, {"tokens": jnp.asarray(prompts)})
+    p2 = model.prefill(params_tt, {"tokens": jnp.asarray(prompts)})
+    dp, pscale, _ = model_common.logit_parity(p2, p1)
+    assert dp <= max(0.05 * pscale, 1e-3), dp
+
+
+# ---------------------------------------------------------------------------
+# TT payload checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def test_tt_payload_checkpoint_roundtrip(rng, tmp_path):
+    from repro.checkpoint.checkpoint import load_tt_payload, save_tt_payload
+
+    params = {
+        "w": jnp.asarray(_decayed(rng, (3, 32, 48))),
+        "norm": jnp.asarray(rng.standard_normal((8,)), jnp.float32),
+        "embed": jnp.asarray(_decayed(rng, (64, 96)), jnp.bfloat16),
+    }
+    comp = TTCompressor(CompressionPolicy(eps=0.1, min_size=1024))
+    payload, _ = comp.compress(params)
+    path = str(tmp_path / "ttckpt")
+    save_tt_payload(path, payload, extra={"eps": 0.1})
+
+    # overwriting an existing committed payload goes through the .old swap
+    save_tt_payload(path, payload, extra={"eps": 0.1})
+
+    loaded, manifest = load_tt_payload(path, like=params)
+    assert manifest["extra"]["eps"] == 0.1
+    flat0 = jax.tree_util.tree_flatten_with_path(
+        payload, is_leaf=lambda x: hasattr(x, "kind"))[0]
+    flat1 = jax.tree_util.tree_flatten_with_path(
+        loaded, is_leaf=lambda x: hasattr(x, "kind"))[0]
+    for (p0, c0), (p1, c1) in zip(flat0, flat1):
+        assert p0 == p1
+        assert c0.kind == c1.kind
+        assert tuple(c0.orig_shape) == tuple(c1.orig_shape)
+        assert jnp.dtype(c0.orig_dtype) == jnp.dtype(c1.orig_dtype)
+        if c0.kind == "tt":
+            assert tuple(c0.tt.ranks) == tuple(c1.tt.ranks)
+            assert c0.tt.eps == c1.tt.eps
+            for g0, g1 in zip(c0.tt.cores, c1.tt.cores):
+                np.testing.assert_array_equal(
+                    np.asarray(g0, np.float32), np.asarray(g1, np.float32)
+                )
+    # reconstruction error is preserved exactly
+    rec0 = comp.decompress(payload)
+    rec1 = comp.decompress(loaded)
+    for a, b in zip(jax.tree.leaves(rec0), jax.tree.leaves(rec1)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-6
+        )
