@@ -11,6 +11,9 @@
   kernels   Pallas kernel block-shape sweeps vs ref oracles (quick)
   tt_serve  TT-native serving — reconstruct-then-serve vs decode straight
             from TT cores (tok/s + resident weight bytes)
+  tt_families  TT-native coverage sweep — logit parity + byte reduction on
+            one reduced config per family (transformer/encdec/mamba2/
+            rglru/MoE); a family regressing to reconstruct fails the lane
 
 ``--fast`` propagates to every benchmark that accepts a ``fast=`` kwarg
 (smaller sweeps, single method) — the CI smoke lane that catches
@@ -69,6 +72,11 @@ def bench_tt_serve(fast: bool = False):
     tt_serve.run(fast=fast)
 
 
+def bench_tt_families(fast: bool = False):
+    from benchmarks import tt_serve
+    tt_serve.run_families(fast=fast)
+
+
 ALL = {
     "table1": bench_table1,
     "table3": bench_table3,
@@ -77,6 +85,7 @@ ALL = {
     "roofline": bench_roofline,
     "kernels": bench_kernels,
     "tt_serve": bench_tt_serve,
+    "tt_families": bench_tt_families,
 }
 
 

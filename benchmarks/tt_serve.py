@@ -11,7 +11,9 @@ serving workload that matters (memory-bound batched decode):
 
 Reports tokens/s and resident weight bytes for both, and asserts the two
 produce the same logits (same cores, same contraction order — only
-rounding differs).  ``fast=True`` is the CI smoke lane.
+rounding differs).  ``fast=True`` is the CI smoke lane; ``run_families``
+sweeps one reduced config per family (transformer, encdec, mamba2, rglru,
+MoE) so TT-native coverage regressions fail the build.
 """
 
 from __future__ import annotations
@@ -54,7 +56,7 @@ def run(fast: bool = False, arch: str = "gemma3-1b", eps: float = 0.2):
     params_rx = comp.decompress(payload)
     reconstruct_t = time.time() - t0
     t0 = time.time()
-    params_tt = model_common.tt_native_params(payload)
+    params_tt = model_common.tt_native_params(payload, family=cfg.family)
     convert_t = time.time() - t0
 
     rng = np.random.default_rng(0)
@@ -89,7 +91,41 @@ def run(fast: bool = False, arch: str = "gemma3-1b", eps: float = 0.2):
     tt_b = rows[1][2]
     assert tt_b < dense_b, (tt_b, dense_b)
     print(f"resident-weight reduction: {dense_b / tt_b:.2f}x")
+    return {"arch": arch, "max_diff": d, "agreement": agree,
+            "dense_bytes": dense_b, "tt_bytes": tt_b}
+
+
+# one reduced config per architecture family: transformer (dense), encdec,
+# ssm (mamba2), hybrid (rglru), and MoE expert banks
+FAMILY_ARCHS = (
+    "gemma3-1b",
+    "seamless-m4t-large-v2",
+    "mamba2-1.3b",
+    "recurrentgemma-2b",
+    "olmoe-1b-7b",
+)
+
+
+def run_families(fast: bool = False, eps: float = 0.2):
+    """Coverage lane: TT-native serving across EVERY family in the zoo.
+
+    Each family must (a) pass the shared logit-parity bound against
+    reconstruct-then-serve and (b) shrink resident weight bytes vs dense —
+    the two asserts inside ``run`` — so a family regressing to
+    reconstruct-on-load fails the build, not just a benchmark number."""
+    results = [run(fast=fast, arch=arch, eps=eps) for arch in FAMILY_ARCHS]
+    print("\nTT-native coverage (family sweep)")
+    print(f"{'arch':<24}{'max|Δ|':>10}{'agree':>8}{'byte reduction':>16}")
+    for r in results:
+        print(f"{r['arch']:<24}{r['max_diff']:>10.2e}"
+              f"{r['agreement']:>8.0%}"
+              f"{r['dense_bytes'] / r['tt_bytes']:>15.2f}x")
+    return results
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    if "--families" in sys.argv:
+        run_families(fast="--fast" in sys.argv)
+    else:
+        run(fast="--fast" in sys.argv)

@@ -60,7 +60,7 @@ def _demo(args) -> None:
 
     # --- receiver: TT-native serving params (no dense materialization) ----
     t0 = time.time()
-    params_tt = model_common.tt_native_params(payload)
+    params_tt = model_common.tt_native_params(payload, family=cfg.family)
     print(f"[serve] TT-native conversion (lead tables only) in "
           f"{time.time() - t0:.2f}s")
     # the oracle still reconstructs (eq. 1/2) — the path TT-native replaces

@@ -61,9 +61,13 @@ def _key_str(k) -> str:
 #     tt_payload.npz    — raw leaves + TT cores (cores keep their dtype)
 #     _COMMITTED        — atomic commit marker
 
-def save_tt_payload(directory: str, payload, extra: Optional[Dict] = None
-                    ) -> str:
-    """Serialize a TTCompressor payload (CompressedParam pytree)."""
+def save_tt_payload(directory: str, payload, extra: Optional[Dict] = None,
+                    family: Optional[str] = None) -> str:
+    """Serialize a TTCompressor payload (CompressedParam pytree).
+
+    family: the model family (``cfg.family``) the payload was compressed
+    from, recorded in the manifest so a TT-native restore can select the
+    right serving-rule set (and refuse a payload from the wrong arch)."""
     from repro.core.compression import CompressedParam
 
     def is_cp(x):
@@ -108,7 +112,8 @@ def save_tt_payload(directory: str, payload, extra: Optional[Dict] = None
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     np.savez(os.path.join(tmp, "tt_payload.npz"), **arrays)
-    manifest = {"time": time.time(), "leaves": leaves, "extra": extra or {}}
+    manifest = {"time": time.time(), "leaves": leaves, "extra": extra or {},
+                "family": family}
     with open(os.path.join(tmp, "tt_manifest.json"), "w") as f:
         json.dump(manifest, f)
     with open(os.path.join(tmp, "_COMMITTED"), "w") as f:

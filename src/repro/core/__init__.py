@@ -68,6 +68,7 @@ from repro.core.tt_linear import (
     select_layer,
     spectral_decay_pytree,
     tt_apply,
+    tt_apply_experts,
     tt_linear_from_tt,
     tt_param_bytes,
 )

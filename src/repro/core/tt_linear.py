@@ -25,6 +25,11 @@ A ``TTLinear`` wraps one (optionally layer-stacked) weight:
   * ``cores`` — the remaining input/output cores, shared by every layer.
   * ``split`` — how many of ``cores`` are input cores (contracted against
                 the activation); the rest expand the output modes.
+  * ``experts`` — MoE expert banks keep one extra lead mode: the stacked
+                lead table is ``(L, E, r_s)`` and ``select_layer`` yields
+                ``(E, r_s)`` — a per-expert family of chains over the SAME
+                shared cores, applied by ``tt_apply_experts`` through the
+                expert-batched kernel path (``tt_contract_batched``).
 
 ``tt_apply`` runs the lead-absorbed chain through the fused Pallas kernels
 (``kernels/tt_contract``), falling back to the einsum chain for deep TTs.
@@ -47,16 +52,25 @@ from repro.core import tt as _tt
 
 @dataclass
 class TTLinear:
-    lead: Optional[jax.Array]        # (L, r_s) stacked | (r_s,) selected | None
+    lead: Optional[jax.Array]        # (L[, E], r_s) stacked | ([E,] r_s) | None
     cores: List[jax.Array]           # [g (r,n,s), ...]; cores[0] r == r_s
     split: int                       # number of input cores
     in_shape: Tuple[int, ...]        # dense-weight input dims, e.g. (D,)
     out_shape: Tuple[int, ...]       # dense-weight output dims, e.g. (H, K)
     dtype: Any = jnp.bfloat16        # activation dtype of the dense original
+    experts: Optional[int] = None    # expert-bank size E (extra lead mode
+                                     # kept as a batch axis at apply time)
+
+    @property
+    def stacked(self) -> bool:
+        """True while the per-layer lead table still carries its L axis."""
+        if self.lead is None:
+            return False
+        return self.lead.ndim == (3 if self.experts else 2)
 
     @property
     def num_layers(self) -> Optional[int]:
-        if self.lead is not None and self.lead.ndim == 2:
+        if self.stacked:
             return int(self.lead.shape[0])
         return None
 
@@ -71,15 +85,17 @@ class TTLinear:
 def _ttl_flatten(t: TTLinear):
     return (
         (t.lead, t.cores),
-        (t.split, t.in_shape, t.out_shape, jnp.dtype(t.dtype).name),
+        (t.split, t.in_shape, t.out_shape, jnp.dtype(t.dtype).name,
+         t.experts),
     )
 
 
 def _ttl_unflatten(aux, kids):
-    split, in_shape, out_shape, dtype = aux
+    split, in_shape, out_shape, dtype, experts = aux
     return TTLinear(
         lead=kids[0], cores=kids[1], split=split,
         in_shape=in_shape, out_shape=out_shape, dtype=jnp.dtype(dtype),
+        experts=experts,
     )
 
 
@@ -93,17 +109,24 @@ def is_tt_linear(x) -> bool:
 def select_layer(t: TTLinear, idx) -> TTLinear:
     """Layer ``idx``'s view of a stacked TTLinear: gather its lead vector
     (``idx`` may be traced — this is what runs inside the layer scan);
-    cores are shared and pass through untouched."""
-    if t.lead is None or t.lead.ndim == 1:
+    cores are shared and pass through untouched.
+
+    Out-of-range ``idx`` is pinned to CLAMP (``mode="clip"``): a traced
+    index beyond the stack returns the last layer's lead instead of jnp's
+    default fill-with-NaN — deterministic, and identical between traced and
+    concrete indices."""
+    if not t.stacked:
         return t
     return TTLinear(
-        lead=jnp.take(t.lead, idx, axis=0), cores=t.cores, split=t.split,
-        in_shape=t.in_shape, out_shape=t.out_shape, dtype=t.dtype,
+        lead=jnp.take(t.lead, idx, axis=0, mode="clip"), cores=t.cores,
+        split=t.split, in_shape=t.in_shape, out_shape=t.out_shape,
+        dtype=t.dtype, experts=t.experts,
     )
 
 
 def tt_apply(x: jax.Array, t: TTLinear) -> jax.Array:
     """y = x · W from cores alone; x (..., *in_shape) → (..., *out_shape)."""
+    assert not t.experts, "expert-bank TTLinear: use tt_apply_experts"
     assert t.lead is None or t.lead.ndim == 1, (
         "stacked TTLinear: select_layer() before apply"
     )
@@ -125,6 +148,34 @@ def tt_apply(x: jax.Array, t: TTLinear) -> jax.Array:
     from repro.kernels.tt_contract.ops import tt_contract  # lazy: no cycle
     y2 = tt_contract(x2, chain, split=t.split)
     return y2.reshape(*batch, *t.out_shape).astype(x.dtype)
+
+
+def tt_apply_experts(x: jax.Array, t: TTLinear) -> jax.Array:
+    """Expert-banked apply: y[e] = x[e] · W[e] straight from cores.
+
+    x (E, C, *in_shape) → (E, C, *out_shape).  Every expert shares the same
+    in/out cores; only the tiny (E, r_s) lead table distinguishes them, so
+    the whole bank contracts as ONE batched chain (``tt_contract_batched``)
+    — the dense (E, N_in, N_out) bank is never materialized."""
+    assert t.experts, "plain TTLinear: use tt_apply"
+    assert t.lead is not None and t.lead.ndim == 2, (
+        "stacked expert TTLinear: select_layer() before apply"
+    )
+    e = int(t.lead.shape[0])
+    assert x.shape[0] == e, (x.shape, e)
+    nin = len(t.in_shape)
+    assert x.shape[x.ndim - nin:] == tuple(t.in_shape), (x.shape, t.in_shape)
+    batch = x.shape[1: x.ndim - nin]
+    x3 = x.reshape(e, int(np.prod(batch or (1,))), -1)
+
+    # per-expert lead-absorbed first core: (E, r_s)·(r_s, n_1, r_1)
+    g0e = jnp.einsum(
+        "er,rns->ens", t.lead.astype(jnp.float32),
+        t.cores[0].astype(jnp.float32),
+    )
+    from repro.kernels.tt_contract.ops import tt_contract_batched
+    y3 = tt_contract_batched(x3, g0e, list(t.cores[1:]), split=t.split)
+    return y3.reshape(e, *batch, *t.out_shape).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -154,6 +205,7 @@ def tt_linear_from_tt(
     in_ndim: int,
     dtype=jnp.bfloat16,
     core_dtype=jnp.float32,
+    experts: int = 0,
 ) -> Optional[TTLinear]:
     """Build a TTLinear from a whole-tensor TT of a (stacked) dense weight.
 
@@ -165,10 +217,16 @@ def tt_linear_from_tt(
     map cleanly onto the axes (padded members) — caller falls back to
     reconstruction.
 
+    experts: how many TRAILING stack axes form an expert bank (MoE weights
+    (L, E, D, F) use stack=2, experts=1).  Their modes stay a batch axis of
+    the lead table — (L, E, r_s) — instead of being scanned over, so one
+    layer's whole bank applies as a single batched chain.
+
     core_dtype: storage dtype of the resident cores.  The contraction
     upcasts to f32 regardless; bf16 storage rounds the cores exactly like
     reconstruct-then-serve rounds the dense matrix, at half the bytes.
     """
+    assert 0 <= experts <= stack
     groups = _group_dims(tt.shape, orig_shape)
     if groups is None:
         return None
@@ -176,8 +234,11 @@ def tt_linear_from_tt(
     split = sum(groups[stack: stack + in_ndim])
     if split < 1 or len(tt.cores) - ns - split < 1:
         return None                  # need ≥1 input core and ≥1 output core
+    if experts and ns == 0:
+        return None                  # expert bank needs its stack modes
 
     lead = None
+    n_experts = None
     cores = [jnp.asarray(c, jnp.float32) for c in tt.cores]
     if ns > 0:
         # prefix-reconstruct the stack modes: (1,n_1,r_1) ×₁ … → (L, r_s)
@@ -185,7 +246,10 @@ def tt_linear_from_tt(
         for k in range(1, ns):
             r, n, s = cores[k].shape
             acc = (acc @ cores[k].reshape(r, n * s)).reshape(-1, s)
-        lead = acc                                    # (L, r_s)
+        lead = acc                                    # (L[·E], r_s)
+        if experts:
+            n_experts = int(np.prod(orig_shape[stack - experts: stack]))
+            lead = lead.reshape(-1, n_experts, lead.shape[-1])  # (L, E, r_s)
         cores = cores[ns:]
     cd = jnp.dtype(core_dtype)
     return TTLinear(
@@ -194,19 +258,22 @@ def tt_linear_from_tt(
         in_shape=tuple(orig_shape[stack: stack + in_ndim]),
         out_shape=tuple(orig_shape[stack + in_ndim:]),
         dtype=dtype,
+        experts=n_experts,
     )
 
 
 def tt_param_bytes(tree) -> int:
     """Resident weight bytes of a params pytree: TT leaves count their
-    cores+lead payload, dense leaves their full array."""
+    cores+lead payload, dense leaves their full array.  Non-array leaves
+    (Python step counters and other scalars riding in checkpoint trees)
+    carry no resident weight bytes and are skipped."""
     total = 0
     for leaf in jax.tree.leaves(tree, is_leaf=is_tt_linear):
         if is_tt_linear(leaf):
             total += sum(int(c.size) * c.dtype.itemsize for c in leaf.cores)
             if leaf.lead is not None:
                 total += int(leaf.lead.size) * leaf.lead.dtype.itemsize
-        else:
+        elif hasattr(leaf, "size") and hasattr(leaf, "dtype"):
             total += int(leaf.size) * leaf.dtype.itemsize
     return total
 

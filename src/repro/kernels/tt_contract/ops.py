@@ -23,14 +23,34 @@ import jax.numpy as jnp
 
 from repro.kernels import common
 from repro.kernels.tt_contract import kernel as _kernel
-from repro.kernels.tt_contract.ref import tt_contract_ref, tt_dense_ref
+from repro.kernels.tt_contract.ref import (
+    tt_contract_batched_ref, tt_contract_ref, tt_dense_ref,
+)
 
 
-def _fits_vmem(x2, cores, n_out: int) -> bool:
-    """f32 bytes of one grid step at the tile _grid_1d will actually pick
-    (activation tile in + out, cores fully resident)."""
+def _fits_vmem(x2, cores, n_out: int, split: int) -> bool:
+    """f32 bytes of one grid step at the tile _grid_1d will actually pick:
+    activation tile in + out, cores fully resident, PLUS the largest
+    intermediate the fused body materializes — the depth-3 expand path's
+    ``(bb, n_mid·r2)`` tile can dwarf both activation tiles and used to be
+    unaccounted, letting oversized chains onto the fused path."""
     bb = _kernel._grid_1d(x2.shape[0])
-    ops_bytes = 4 * (bb * (x2.shape[1] + n_out)
+    n_in = x2.shape[1]
+    if len(cores) == 2:
+        interm = bb * cores[0].shape[1]                   # t = x·g0 (bb, r1)
+    else:
+        r1 = cores[0].shape[1]
+        n_mid, r2 = cores[1].shape[1], cores[1].shape[2]
+        # producer and consumer tiles are live at the same time inside the
+        # fused body, so they SUM (a max() here would repeat the original
+        # under-count one level down)
+        if split == 1:
+            interm = bb * (r1 + n_mid * r2)               # t1 + (bb,n_mid·r2)
+        else:
+            # transposed x copy (bb·n_mid, n1) + partial (bb·n_mid, r1)
+            # + contracted (bb, r2)
+            interm = bb * (n_in + n_mid * r1 + r2)
+    ops_bytes = 4 * (bb * (n_in + n_out) + interm
                      + sum(int(g.size) for g in cores))
     return ops_bytes < common.VMEM_BUDGET // 2
 
@@ -50,13 +70,13 @@ def tt_contract(
     for g in cores[split:]:
         n_out *= g.shape[1]
 
-    if depth == 2 and split == 1 and _fits_vmem(x2, cores, n_out):
+    if depth == 2 and split == 1 and _fits_vmem(x2, cores, n_out, split):
         g0, g1 = cores
         return _kernel.tt_contract_2(
             x2, g0, g1[:, :, 0] if g1.ndim == 3 else g1, interpret=interpret
         )
 
-    if depth == 3 and split in (1, 2) and _fits_vmem(x2, cores, n_out):
+    if depth == 3 and split in (1, 2) and _fits_vmem(x2, cores, n_out, split):
         g0, g1, g2 = cores
         g2m = g2[:, :, 0] if g2.ndim == 3 else g2          # (r2, n3)
         if split == 1:
@@ -76,4 +96,28 @@ def tt_contract(
     return tt_contract_ref(x2, cores, split)
 
 
-__all__ = ["tt_contract", "tt_contract_ref", "tt_dense_ref"]
+def tt_contract_batched(
+    x3: jax.Array,                  # (E, B, N_in)
+    g0b: jax.Array,                 # (E, n1, r1) per-expert lead-absorbed
+    cores: Sequence[jax.Array],     # shared tail [(r,n,s), ...], last s==1
+    split: int,
+    interpret: bool | None = None,
+) -> jax.Array:                     # (E, B, N_out) float32
+    """Expert-batched TT chain: the whole bank in one launch.
+
+    Experts share every tail core — only the lead-absorbed first core
+    differs — so vmapping the fused dispatch over the expert axis gives the
+    Pallas kernels an extra grid dimension (one launch, E×(B/bb) grid steps)
+    while oversized chains still take the per-expert einsum fallback.  The
+    VMEM gate applies per grid step, which is exactly the per-expert tile."""
+    rest = list(cores)
+    return jax.vmap(
+        lambda x2, g0: tt_contract(x2, [g0] + rest, split,
+                                   interpret=interpret)
+    )(x3, g0b)
+
+
+__all__ = [
+    "tt_contract", "tt_contract_batched", "tt_contract_batched_ref",
+    "tt_contract_ref", "tt_dense_ref",
+]

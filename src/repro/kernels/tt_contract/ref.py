@@ -45,6 +45,32 @@ def tt_contract_ref(
     return t.reshape(b, -1)
 
 
+def tt_contract_batched_ref(
+    x3: jax.Array,                  # (E, B, N_in)
+    g0b: jax.Array,                 # (E, n1, r1) per-expert lead-absorbed
+    cores: Sequence[jax.Array],     # shared tail [(r,n,s), ...], last s==1
+    split: int,
+) -> jax.Array:                     # (E, B, N_out) float32
+    """Expert-batched chain oracle: y[e] = x[e] · W[e], where the experts
+    differ only in their lead-absorbed first core and share every later
+    core — written as one einsum chain with a leading expert axis (the
+    batched analogue of ``tt_contract_ref``, same left-to-right order)."""
+    assert 1 <= split <= 1 + len(cores), (split, len(cores))
+    e, b, _ = x3.shape
+    assert g0b.ndim == 3 and g0b.shape[0] == e, g0b.shape
+    t = x3.astype(jnp.float32).reshape(e, b, g0b.shape[1], -1)
+    t = jnp.einsum("ebnm,ens->ebms", t, g0b.astype(jnp.float32))
+    for g in cores[: split - 1]:
+        r = g.shape[0]
+        t = t.reshape(e, b, g.shape[1], -1, r)
+        t = jnp.einsum("ebnmr,rns->ebms", t, g.astype(jnp.float32))
+    t = t.reshape(e, b, 1, -1)
+    for g in cores[split - 1:]:
+        t = jnp.einsum("ebmr,rns->ebmns", t, g.astype(jnp.float32))
+        t = t.reshape(e, b, -1, g.shape[2])
+    return t.reshape(e, b, -1)
+
+
 def tt_dense_ref(cores: Sequence[jax.Array], split: int) -> jax.Array:
     """Materialize the chain into the dense (N_in, N_out) matrix —
     the reconstruct-then-matmul baseline the fused path must match."""

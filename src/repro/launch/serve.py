@@ -43,14 +43,15 @@ def _dense_bytes(payload) -> int:
     )
 
 
-def _tt_setup(params, args):
+def _tt_setup(params, args, cfg):
     """Compress (or load) the TT payload and build the TT-native params.
 
     Returns (params_tt, payload, report_line).  The dense oracle is NOT
     reconstructed here — only the verify pass pays for it (on by default;
-    ``--no-verify`` serves with just cores + raw leaves resident).  Only the
-    transformer family carries TT-native leaves; other families degrade to
-    full reconstruction (still a valid serve).
+    ``--no-verify`` serves with just cores + raw leaves resident).  Every
+    family in the zoo carries TT-native leaves — the family's registered
+    serving rules (``models.common.register_tt_serve_rules``) pick which
+    weights serve from cores; the rest reconstruct as before.
     """
     from repro.core import (
         CompressionPolicy, TTCompressor, spectral_decay_pytree,
@@ -61,7 +62,13 @@ def _tt_setup(params, args):
     comp = TTCompressor(CompressionPolicy(eps=args.tt_eps, min_size=8192))
     if args.tt_checkpoint:
         from repro.checkpoint.checkpoint import load_tt_payload
-        payload, _ = load_tt_payload(args.tt_checkpoint, like=params)
+        payload, manifest = load_tt_payload(args.tt_checkpoint, like=params)
+        ck_family = manifest.get("family")
+        if ck_family is not None and ck_family != cfg.family:
+            raise ValueError(
+                f"TT checkpoint was compressed from family {ck_family!r}, "
+                f"cannot serve arch family {cfg.family!r}"
+            )
         ratio = None
     else:
         # random init has a flat spectrum (incompressible — the policy
@@ -70,7 +77,15 @@ def _tt_setup(params, args):
         params = spectral_decay_pytree(params, alpha=args.tt_alpha)
         payload, report = comp.compress(params)
         ratio = report.ratio
-    params_tt = model_common.tt_native_params(payload)
+        if getattr(args, "save_tt_checkpoint", None):
+            from repro.checkpoint.checkpoint import save_tt_payload
+            save_tt_payload(
+                args.save_tt_checkpoint, payload,
+                extra={"eps": args.tt_eps, "arch": cfg.name},
+                family=cfg.family,
+            )
+            print(f"[serve] TT payload saved to {args.save_tt_checkpoint}")
+    params_tt = model_common.tt_native_params(payload, family=cfg.family)
     dense_b = _dense_bytes(payload)
     tt_b = tt_param_bytes(params_tt)
     line = (f"weight bytes: dense {dense_b:,} -> tt-native {tt_b:,} "
@@ -126,7 +141,7 @@ def serve(args) -> dict:
         params = model.init(jax.random.PRNGKey(args.seed))
         payload = None
         if args.weights == "tt":
-            params, payload, byte_line = _tt_setup(params, args)
+            params, payload, byte_line = _tt_setup(params, args, cfg)
             print(f"[serve] TT-native mode: {byte_line}")
         decode = jax.jit(model.decode_step, donate_argnums=(1,))
 
@@ -186,7 +201,12 @@ def main() -> None:
                     help="spectral decay of the synthetic trained weights")
     ap.add_argument("--tt-checkpoint", type=str, default=None,
                     help="load the TT payload from this directory "
-                         "(checkpoint.save_tt_payload layout)")
+                         "(checkpoint.save_tt_payload layout); the "
+                         "manifest's recorded family must match --arch")
+    ap.add_argument("--save-tt-checkpoint", type=str, default=None,
+                    help="after in-process compression, save the TT "
+                         "payload here (records the model family in the "
+                         "manifest for the load-time cross-check)")
     ap.add_argument("--verify", action="store_true", default=True,
                     help="cross-check TT-native logits against the "
                          "reconstruct-then-serve oracle (default ON; this "

@@ -14,7 +14,7 @@ Conventions (used by every arch in the zoo):
 from __future__ import annotations
 
 import re
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -84,20 +84,26 @@ def activate(x: jax.Array, act: str) -> jax.Array:
 
 def dense_apply(x: jax.Array, w, in_ndim: int = 1) -> jax.Array:
     """THE dense-weight application point: every matmul against a model
-    weight in the transformer stack routes through here, so a weight can be
-    either a raw array or a TT payload (``core/tt_linear.TTLinear``) without
-    the call sites knowing.
+    weight in the zoo routes through here, so a weight can be either a raw
+    array or a TT payload (``core/tt_linear.TTLinear``) without the call
+    sites knowing.
 
     Raw ``w``: shape (*in_dims, *out_dims) with ``in_ndim`` leading input
     axes; contracts x's trailing ``in_ndim`` axes against them (identical
-    lowering to the einsums this replaces — one dot_general).  TTLinear
-    ``w``: contracts the activation straight through the TT cores via the
-    fused ``kernels/tt_contract`` chain — the full dense matrix is never
-    materialized.
+    lowering to the einsums this replaces — one dot_general; mismatched
+    dtypes PROMOTE like the einsums did, so an fp32 activation against a
+    bf16 gate weight computes in fp32 and a high-precision weight is never
+    silently downcast).  TTLinear ``w``: contracts the activation straight
+    through the TT cores via the fused ``kernels/tt_contract`` chain — the
+    full dense matrix is never materialized.
     """
     from repro.core import tt_linear as _ttl
     if _ttl.is_tt_linear(w):
         return _ttl.tt_apply(x, w)
+    if w.dtype != x.dtype:
+        dt = jnp.promote_types(x.dtype, w.dtype)
+        x = x.astype(dt)
+        w = w.astype(dt)
     cdims = (
         tuple(range(x.ndim - in_ndim, x.ndim)),
         tuple(range(in_ndim)),
@@ -105,16 +111,120 @@ def dense_apply(x: jax.Array, w, in_ndim: int = 1) -> jax.Array:
     return jax.lax.dot_general(x, w, (cdims, ((), ())))
 
 
-# TT-native serving eligibility: transformer-stack matmul weights, anchored
-# at the ``layers.`` tree root so the (scan-incompatible) encdec/ssm trees
-# never convert.  value = in_ndim (leading input axes after the layer stack).
-# MoE expert weights stay dense: their einsums batch over the expert axis,
-# which the TT chain has no slot for (they reconstruct on load instead).
-_TT_SERVE_RULES = [
-    (re.compile(r"^layers\.attn\.w[qkv]$"), 1),
-    (re.compile(r"^layers\.attn\.wo$"), 2),
-    (re.compile(r"^layers\.mlp\.w_(gate|up|down)$"), 1),
-]
+def expert_apply(x: jax.Array, w) -> jax.Array:
+    """Expert-banked weight application: x (E, C, IN) against w (E, IN, OUT)
+    — the MoE FFN's batched matmul.  Raw banks lower to the einsum they
+    replace; an expert-axis TTLinear contracts the whole bank straight from
+    cores via the expert-batched TT chain (``tt_apply_experts``)."""
+    from repro.core import tt_linear as _ttl
+    if _ttl.is_tt_linear(w):
+        return _ttl.tt_apply_experts(x, w)
+    return jnp.einsum("eci,eio->eco", x, w)
+
+
+# ---------------------------------------------------------------------------
+# TT-native serving: per-family rule registry + TT-aware layer-scan plumbing
+# ---------------------------------------------------------------------------
+
+class TTServeRule(NamedTuple):
+    """One eligible-weight pattern of a family's params tree.
+
+    pattern — regex over the dot-joined pytree path of the weight;
+    in_ndim — matmul input axes after the stack/expert axes;
+    stack   — leading layer-stack axes contracted into the lead table;
+    experts — trailing stack axes that form an expert bank (kept as a batch
+              axis at apply time; served via the expert-batched chain).
+    """
+    pattern: "re.Pattern[str]"
+    in_ndim: int
+    stack: int = 1
+    experts: int = 0
+
+
+# family name -> rules, registered BESIDE each model module (see the
+# ``register_tt_serve_rules`` calls at the bottom of transformer.py,
+# encdec.py, mamba2.py, rglru.py) — common.py owns only the mechanism.
+_TT_SERVE_REGISTRY: dict = {}
+
+
+def register_tt_serve_rules(family: str, rules) -> None:
+    """Register a family's TT-native serving rules (str patterns compiled)."""
+    compiled = []
+    for r in rules:
+        if not isinstance(r, TTServeRule):
+            r = TTServeRule(*r)
+        if isinstance(r.pattern, str):
+            r = r._replace(pattern=re.compile(r.pattern))
+        compiled.append(r)
+    _TT_SERVE_REGISTRY[family] = tuple(compiled)
+
+
+def tt_serve_rules(family: Optional[str] = None):
+    """Rules for one family, or the union over every registered family
+    (path namespaces are disjoint across the zoo, so the union is safe —
+    used when the caller doesn't know which family a payload came from)."""
+    from repro.models import registry as _registry  # noqa: F401  (lazy:
+    # importing the registry imports every model module, which registers
+    # its rules as a side effect — common.py itself stays model-agnostic)
+    if family is not None:
+        return _TT_SERVE_REGISTRY.get(family, ())
+    out = []
+    for fam in sorted(_TT_SERVE_REGISTRY):
+        out.extend(_TT_SERVE_REGISTRY[fam])
+    return tuple(out)
+
+
+def layers_have_tt(layers) -> bool:
+    """True when a stacked layer tree carries any TTLinear leaf."""
+    from repro.core.tt_linear import is_tt_linear
+    return any(
+        is_tt_linear(leaf)
+        for leaf in jax.tree.leaves(layers, is_leaf=is_tt_linear)
+    )
+
+
+def layer_at(layers, idx):
+    """Layer ``idx``'s params from a stacked tree (``idx`` may be traced).
+
+    Raw leaves gather their idx-th row — same dynamic-slice the scan's xs
+    mechanism would emit.  TTLinear leaves gather only their (L, r) lead
+    vector; the shared cores stay closure constants, so the TT-native scan
+    body keeps HLO size depth-independent without duplicating cores per
+    layer (the reason TT weights cannot ride in the scan's xs).  Both
+    gathers clamp out-of-range indices (``mode="clip"``) — pinned so traced
+    and concrete indices behave identically."""
+    from repro.core.tt_linear import is_tt_linear, select_layer
+
+    def sel(leaf):
+        if is_tt_linear(leaf):
+            return select_layer(leaf, idx)
+        return jnp.take(leaf, idx, axis=0, mode="clip")
+
+    return jax.tree.map(sel, layers, is_leaf=is_tt_linear)
+
+
+def tt_scan(fn, init, layers, xs=(), length: Optional[int] = None):
+    """``lax.scan`` over a stacked layer tree, TT-aware.
+
+    fn(carry, layer_params, *xs_slices) -> (carry, out).  Dense trees scan
+    the params as xs (the stock pattern); trees holding TTLinear leaves
+    scan the layer INDEX instead and gather each layer's params inside the
+    body (``layer_at``) — cores must stay closure constants, never scan
+    xs.  Every family's forward/decode stack runs through here, so TT-
+    native serving is a property of the scan plumbing, not of one model.
+    """
+    if layers_have_tt(layers):
+        assert length is not None, "tt_scan over TT leaves needs length"
+
+        def body_tt(carry, scanned):
+            return fn(carry, layer_at(layers, scanned[0]), *scanned[1:])
+
+        return jax.lax.scan(body_tt, init, (jnp.arange(length), *xs))
+
+    def body(carry, scanned):
+        return fn(carry, scanned[0], *scanned[1:])
+
+    return jax.lax.scan(body, init, (layers, *xs))
 
 
 def _path_str(path) -> str:
@@ -131,23 +241,34 @@ def _path_str(path) -> str:
     return ".".join(parts)
 
 
-def tt_native_params(compressed, core_dtype=None):
+def tt_native_params(compressed, core_dtype=None, family: Optional[str] = None):
     """TTCompressor payload → TT-native serving params.
 
-    Layer-stacked transformer matmul weights whose TT payload maps cleanly
-    onto the (stack, in, out) axes become ``TTLinear`` leaves — served
-    straight from cores.  Everything else (embeddings, norms, MoE experts,
-    raw-routed and padded params) reconstructs exactly as the Fig. 1
-    receiving node does today.  The result drops into ``decode_step`` /
-    ``forward`` unchanged; peak weight bytes shrink by the payload's
-    compression ratio on the converted leaves.
+    Layer-stacked matmul weights whose TT payload maps cleanly onto the
+    (stack[, experts], in, out) axes become ``TTLinear`` leaves — served
+    straight from cores.  Eligibility comes from the per-family rule
+    registry (``register_tt_serve_rules``): every family in the zoo —
+    transformer (dense/moe/vlm), encdec, ssm, hybrid — registers its own
+    weight paths, including MoE expert banks (expert-axis TTLinear, served
+    via the expert-batched chain).  Everything else (embeddings, norms,
+    routers, raw-routed and padded params) reconstructs exactly as the
+    Fig. 1 receiving node does today.  The result drops into
+    ``decode_step`` / ``forward`` unchanged; peak weight bytes shrink by
+    the payload's compression ratio on the converted leaves.
 
-    core_dtype: resident-core storage dtype; default None stores each
-    leaf's cores in its original weight dtype (bf16 for the zoo) — the
-    same rounding reconstruct-then-serve applies to the dense matrix.
+    family: which family's rules to apply (``cfg.family``); None applies
+    the union over all registered families — path namespaces are disjoint
+    across the zoo, so this is safe when the payload's origin is unknown.
+
+    core_dtype: resident-core storage dtype; ``None`` (the sentinel — an
+    explicit dtype is never second-guessed, however it compares) stores
+    each leaf's cores in its original weight dtype (bf16 for the zoo) —
+    the same rounding reconstruct-then-serve applies to the dense matrix.
     """
     from repro.core import compression as _comp
     from repro.core import tt_linear as _ttl
+
+    rules = tt_serve_rules(family)
 
     def is_cp(x):
         return isinstance(x, _comp.CompressedParam)
@@ -160,12 +281,15 @@ def tt_native_params(compressed, core_dtype=None):
         leaf = None
         if is_cp(c) and c.kind == "tt" and c.crop_dims is None:
             name = _path_str(path)
-            for pat, in_ndim in _TT_SERVE_RULES:
-                if pat.search(name):
+            for rule in rules:
+                if rule.pattern.search(name):
                     leaf = _ttl.tt_linear_from_tt(
-                        c.tt, c.orig_shape, stack=1, in_ndim=in_ndim,
+                        c.tt, c.orig_shape,
+                        stack=rule.stack, in_ndim=rule.in_ndim,
                         dtype=c.orig_dtype,
-                        core_dtype=core_dtype or c.orig_dtype,
+                        core_dtype=(c.orig_dtype if core_dtype is None
+                                    else core_dtype),
+                        experts=rule.experts,
                     )
                     break
         if leaf is None:

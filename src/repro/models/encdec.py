@@ -85,13 +85,13 @@ def encode(params: EncDecParams, frames: jax.Array, cfg,
             hn = common.rms_norm(hh, lp.ln1, cfg.norm_eps)
             q, k, v = attn.qkv_project(hn, lp.attn, cfg, positions)
             o = attn.cross_attend(q, k, v, cfg)   # full bidirectional
-            hh = hh + jnp.einsum("bshk,hkd->bsd", o, lp.attn.wo)
+            hh = hh + common.dense_apply(o, lp.attn.wo, in_ndim=2)
             hn = common.rms_norm(hh, lp.ln2, cfg.norm_eps)
             return (hh + mlp_mod.mlp_apply(hn, lp.mlp, cfg.act)).astype(hh.dtype)
         fn = jax.checkpoint(blk) if cfg.remat else blk
         return fn(h, lp), None
 
-    x, _ = jax.lax.scan(body, x, params.enc_layers)
+    x, _ = common.tt_scan(body, x, params.enc_layers, length=cfg.enc_layers)
     return common.rms_norm(x, params.enc_norm, cfg.norm_eps)
 
 
@@ -104,14 +104,14 @@ def _dec_block(h, lp: DecLayerParams, memory, cfg, positions, mem_positions,
     hn = common.rms_norm(h, lp.ln1, cfg.norm_eps)
     q, k, v = attn.qkv_project(hn, lp.self_attn, cfg, positions)
     o = attn.causal_attend(q, k, v, cfg, impl=impl)
-    h = h + jnp.einsum("bshk,hkd->bsd", o, lp.self_attn.wo)
+    h = h + common.dense_apply(o, lp.self_attn.wo, in_ndim=2)
     # cross attention to encoder memory
     hn = common.rms_norm(h, lp.ln_x, cfg.norm_eps)
-    q = jnp.einsum("bsd,dhk->bshk", hn, lp.cross_attn.wq)
-    km = jnp.einsum("bsd,dhk->bshk", memory, lp.cross_attn.wk)
-    vm = jnp.einsum("bsd,dhk->bshk", memory, lp.cross_attn.wv)
+    q = common.dense_apply(hn, lp.cross_attn.wq)
+    km = common.dense_apply(memory, lp.cross_attn.wk)
+    vm = common.dense_apply(memory, lp.cross_attn.wv)
     o = attn.cross_attend(q, km, vm, cfg)
-    h = h + jnp.einsum("bshk,hkd->bsd", o, lp.cross_attn.wo)
+    h = h + common.dense_apply(o, lp.cross_attn.wo, in_ndim=2)
     hn = common.rms_norm(h, lp.ln2, cfg.norm_eps)
     return (h + mlp_mod.mlp_apply(hn, lp.mlp, cfg.act)).astype(h.dtype)
 
@@ -134,7 +134,7 @@ def decode_train(params: EncDecParams, tokens, memory, cfg,
             fn = jax.checkpoint(fn)
         return fn(h, lp), None
 
-    x, _ = jax.lax.scan(body, x, params.dec_layers)
+    x, _ = common.tt_scan(body, x, params.dec_layers, length=cfg.num_layers)
     return common.rms_norm(x, params.final_norm, cfg.norm_eps)
 
 
@@ -177,10 +177,18 @@ def precompute_memory_cache(params: EncDecParams, memory, cfg,
                             cache: EncDecCache) -> EncDecCache:
     """Project the encoder memory into per-layer cross-attn K/V once."""
     def proj(lp: DecLayerParams):
-        km = jnp.einsum("bsd,dhk->bshk", memory, lp.cross_attn.wk)
-        vm = jnp.einsum("bsd,dhk->bshk", memory, lp.cross_attn.wv)
+        km = common.dense_apply(memory, lp.cross_attn.wk)
+        vm = common.dense_apply(memory, lp.cross_attn.wv)
         return km, vm
-    km, vm = jax.vmap(proj)(params.dec_layers)
+    if common.layers_have_tt(params.dec_layers):
+        # TTLinear leaves can't ride a vmap over the stacked tree (cores
+        # carry no layer axis) — map the layer index and gather instead
+        km, vm = jax.lax.map(
+            lambda i: proj(common.layer_at(params.dec_layers, i)),
+            jnp.arange(cfg.num_layers),
+        )
+    else:
+        km, vm = jax.vmap(proj)(params.dec_layers)
     return cache._replace(mem_k=km.astype(cache.mem_k.dtype),
                           mem_v=vm.astype(cache.mem_v.dtype))
 
@@ -191,24 +199,24 @@ def decode_step(params: EncDecParams, cache: EncDecCache, tokens, cfg):
     b = x.shape[0]
     positions = jnp.broadcast_to(pos[None, None], (b, 1))
 
-    def body(h, scanned):
-        lp, k_c, v_c, mk, mv = scanned
+    def body(h, lp, k_c, v_c, mk, mv):
         hn = common.rms_norm(h, lp.ln1, cfg.norm_eps)
         q, k_new, v_new = attn.qkv_project(hn, lp.self_attn, cfg, positions)
         k_c, v_c = attn.cache_update(k_c, v_c, k_new, v_new, pos)
         o = attn.decode_attend(q, k_c, v_c, pos, cfg)
-        h = h + jnp.einsum("bshk,hkd->bsd", o, lp.self_attn.wo)
+        h = h + common.dense_apply(o, lp.self_attn.wo, in_ndim=2)
         hn = common.rms_norm(h, lp.ln_x, cfg.norm_eps)
-        q = jnp.einsum("bsd,dhk->bshk", hn, lp.cross_attn.wq)
+        q = common.dense_apply(hn, lp.cross_attn.wq)
         o = attn.cross_attend(q, mk, mv, cfg)
-        h = h + jnp.einsum("bshk,hkd->bsd", o, lp.cross_attn.wo)
+        h = h + common.dense_apply(o, lp.cross_attn.wo, in_ndim=2)
         hn = common.rms_norm(h, lp.ln2, cfg.norm_eps)
         h = (h + mlp_mod.mlp_apply(hn, lp.mlp, cfg.act)).astype(h.dtype)
         return h, (k_c, v_c)
 
-    x, (k_all, v_all) = jax.lax.scan(
-        body, x,
-        (params.dec_layers, cache.k, cache.v, cache.mem_k, cache.mem_v),
+    x, (k_all, v_all) = common.tt_scan(
+        body, x, params.dec_layers,
+        xs=(cache.k, cache.v, cache.mem_k, cache.mem_v),
+        length=cfg.num_layers,
     )
     hidden = common.rms_norm(x, params.final_norm, cfg.norm_eps)
     logits = common.unembed(hidden, params.embed, cfg.logit_softcap,
@@ -222,3 +230,15 @@ def prefill(params, batch: Dict, cfg, impl: str = "xla"):
     logits = common.unembed(hidden[:, -1:, :], params.embed,
                             cfg.logit_softcap, real_vocab=cfg.vocab_size)
     return logits[:, 0, :]
+
+
+# TT-native serving rules: every encoder/decoder matmul weight — self- and
+# cross-attention projections and both MLP stacks — serves from cores.
+common.register_tt_serve_rules("encdec", [
+    common.TTServeRule(r"^enc_layers\.attn\.w[qkv]$", in_ndim=1),
+    common.TTServeRule(r"^enc_layers\.attn\.wo$", in_ndim=2),
+    common.TTServeRule(r"^enc_layers\.mlp\.w_(gate|up|down)$", in_ndim=1),
+    common.TTServeRule(r"^dec_layers\.(self|cross)_attn\.w[qkv]$", in_ndim=1),
+    common.TTServeRule(r"^dec_layers\.(self|cross)_attn\.wo$", in_ndim=2),
+    common.TTServeRule(r"^dec_layers\.mlp\.w_(gate|up|down)$", in_ndim=1),
+])

@@ -192,7 +192,7 @@ def ssd_chunked(
 def _mamba_mixer(x, lp: MambaLayerParams, cfg):
     di, h, n, _ = _dims(cfg)
     p = cfg.ssm.head_dim
-    xz = jnp.einsum("bsd,de->bse", x, lp.w_in)
+    xz = common.dense_apply(x, lp.w_in)
     z, xi, b, c, dt = _split_proj(xz, cfg)
     conv_in = jnp.concatenate([xi, b, c], axis=-1)
     conv_out = jax.nn.silu(
@@ -211,7 +211,7 @@ def _mamba_mixer(x, lp: MambaLayerParams, cfg):
         (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
         lp.gate_norm, cfg.norm_eps,
     )
-    return jnp.einsum("bse,ed->bsd", y, lp.w_out)
+    return common.dense_apply(y, lp.w_out)
 
 
 def forward(params: MambaParams, tokens, cfg, impl: str = "xla"):
@@ -225,7 +225,7 @@ def forward(params: MambaParams, tokens, cfg, impl: str = "xla"):
         fn = jax.checkpoint(blk) if cfg.remat else blk
         return fn(hcarry, lp), None
 
-    x, _ = jax.lax.scan(body, x, params.layers)
+    x, _ = common.tt_scan(body, x, params.layers, length=cfg.num_layers)
     return common.rms_norm(x, params.final_norm, cfg.norm_eps)
 
 
@@ -264,10 +264,9 @@ def decode_step(params: MambaParams, cache: MambaCache, tokens, cfg):
     p = cfg.ssm.head_dim
     x = params.embed[tokens].astype(common.cdtype(cfg))   # (B, 1, D)
 
-    def body(hcarry, scanned):
-        lp, s_state, c_state = scanned
+    def body(hcarry, lp, s_state, c_state):
         hh = common.rms_norm(hcarry, lp.ln, cfg.norm_eps)
-        xz = jnp.einsum("bsd,de->bse", hh, lp.w_in)
+        xz = common.dense_apply(hh, lp.w_in)
         z, xi, b, c, dt = _split_proj(xz, cfg)
         conv_in = jnp.concatenate([xi, b, c], axis=-1)    # (B, 1, C)
         hist = jnp.concatenate([c_state, conv_in], axis=1)  # (B, W, C)
@@ -291,11 +290,12 @@ def decode_step(params: MambaParams, cache: MambaCache, tokens, cfg):
             (y * jax.nn.silu(z.astype(jnp.float32))).astype(hcarry.dtype),
             lp.gate_norm, cfg.norm_eps,
         )
-        out = hcarry + jnp.einsum("bse,ed->bsd", y, lp.w_out)
+        out = hcarry + common.dense_apply(y, lp.w_out)
         return out.astype(hcarry.dtype), (s_new, hist[:, 1:, :])
 
-    x, (s_all, c_all) = jax.lax.scan(
-        body, x, (params.layers, cache.ssm_state, cache.conv_state)
+    x, (s_all, c_all) = common.tt_scan(
+        body, x, params.layers, xs=(cache.ssm_state, cache.conv_state),
+        length=cfg.num_layers,
     )
     hidden = common.rms_norm(x, params.final_norm, cfg.norm_eps)
     logits = common.unembed(hidden, params.embed, cfg.logit_softcap, real_vocab=cfg.vocab_size)
@@ -309,3 +309,12 @@ def prefill(params, tokens, cfg, impl: str = "xla"):
     hidden = forward(params, tokens, cfg, impl=impl)
     logits = common.unembed(hidden[:, -1:, :], params.embed, cfg.logit_softcap, real_vocab=cfg.vocab_size)
     return logits[:, 0, :]
+
+
+# TT-native serving rules: the mamba2 block's two big matmuls.  The fused
+# in-projection (D, 2Di+2N+H) and out-projection (Di, D) dominate the
+# layer's weight bytes; conv/gate/decay params are tiny and stay raw.
+common.register_tt_serve_rules("ssm", [
+    common.TTServeRule(r"^layers\.w_in$", in_ndim=1),
+    common.TTServeRule(r"^layers\.w_out$", in_ndim=1),
+])

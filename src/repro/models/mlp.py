@@ -232,7 +232,10 @@ def moe_apply(
     e = cfg.moe.num_experts
     k = cfg.moe.num_experts_per_tok
     if getattr(cfg, "opt_moe_a2a", False) and \
+            not common.layers_have_tt(p) and \
             _moe_a2a_applicable(cfg, b, s) is not None:
+        # a2a shard_maps the raw expert arrays; TT-native banks (serving)
+        # take the expert-batched chain below instead
         return moe_apply_a2a(x, p, cfg, capacity_factor)
     n = b * s
     cap = int(np.ceil(n * k / e * capacity_factor))
@@ -257,15 +260,14 @@ def moe_apply(
         # (cap, d_ff) intermediate over the model axis.
         from repro.launch import sharding as _shd
         h = _shd.act_constraint(h, "model", "data", None)
-    g = common.activate(
-        jnp.einsum("ecd,edf->ecf", h, p.w_gate), cfg.act
-    )
-    u = jnp.einsum("ecd,edf->ecf", h, p.w_up)
+    # expert_apply dispatches raw banks and expert-axis TT payloads alike
+    g = common.activate(common.expert_apply(h, p.w_gate), cfg.act)
+    u = common.expert_apply(h, p.w_up)
     if getattr(cfg, "opt_moe_ep", False):
         from repro.launch import sharding as _shd
         g = _shd.act_constraint(g, "model", "data", None)
         u = _shd.act_constraint(u, "model", "data", None)
-    out = jnp.einsum("ecf,efd->ecd", g * u, p.w_down)    # (E, cap, D)
+    out = common.expert_apply(g * u, p.w_down)           # (E, cap, D)
     if getattr(cfg, "opt_moe_ep", False):
         from repro.launch import sharding as _shd
         out = _shd.act_constraint(out, "model", "data", None)

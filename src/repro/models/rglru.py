@@ -158,22 +158,22 @@ def rg_lru_scan(x: jax.Array, gates_r, gates_i, lam) -> jax.Array:
 
 def _rglru_block(x, lp: RGLRULayerParams, cfg):
     h = common.rms_norm(x, lp.ln1, cfg.norm_eps)
-    main = jnp.einsum("bsd,dr->bsr", h, lp.w_x)
+    main = common.dense_apply(h, lp.w_x)
     gate = jax.nn.gelu(
-        jnp.einsum("bsd,dr->bsr", h, lp.w_gate).astype(jnp.float32)
+        common.dense_apply(h, lp.w_gate).astype(jnp.float32)
     )
     conv = _conv1d(main, lp.conv_w, lp.conv_b).astype(jnp.float32)
+    # fp32 activations: dense_apply upcasts the raw gate weights to match
+    # (the explicit .astype(f32) einsums this replaces)
     gr = jax.nn.sigmoid(
-        jnp.einsum("bsr,rq->bsq", conv, lp.w_rg.astype(jnp.float32))
-        + lp.b_rg.astype(jnp.float32)
+        common.dense_apply(conv, lp.w_rg) + lp.b_rg.astype(jnp.float32)
     )
     gi = jax.nn.sigmoid(
-        jnp.einsum("bsr,rq->bsq", conv, lp.w_ig.astype(jnp.float32))
-        + lp.b_ig.astype(jnp.float32)
+        common.dense_apply(conv, lp.w_ig) + lp.b_ig.astype(jnp.float32)
     )
     hseq = rg_lru_scan(conv, gr, gi, lp.lam)
     y = (hseq * gate).astype(x.dtype)
-    x = x + jnp.einsum("bsr,rd->bsd", y, lp.w_out)
+    x = x + common.dense_apply(y, lp.w_out)
     h = common.rms_norm(x, lp.ln2, cfg.norm_eps)
     return (x + mlp_mod.mlp_apply(h, lp.mlp, cfg.act)).astype(x.dtype)
 
@@ -193,7 +193,7 @@ def _attn_block(x, lp: AttnLayerParams, cfg, positions, impl):
     o = attn.causal_attend(
         q, k, v, cfg, window=cfg.hybrid.window, impl=impl
     )
-    x = x + jnp.einsum("bshk,hkd->bsd", o, lp.attn.wo)
+    x = x + common.dense_apply(o, lp.attn.wo, in_ndim=2)
     h = common.rms_norm(x, lp.ln2, cfg.norm_eps)
     return (x + mlp_mod.mlp_apply(h, lp.mlp, cfg.act)).astype(x.dtype)
 
@@ -204,6 +204,8 @@ def forward(params: GriffinParams, tokens, cfg, impl: str = "xla"):
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
 
+    n_triples, n_tail = plan(cfg)
+
     def triple(h, tp: TripleParams):
         def blk(hh, tp):
             hh = common.pin_batch(hh, cfg)
@@ -213,14 +215,14 @@ def forward(params: GriffinParams, tokens, cfg, impl: str = "xla"):
         fn = jax.checkpoint(blk) if cfg.remat else blk
         return fn(h, tp), None
 
-    x, _ = jax.lax.scan(triple, x, params.triples)
+    x, _ = common.tt_scan(triple, x, params.triples, length=n_triples)
     if params.tail is not None:
         def tail_blk(h, lp):
             fn = jax.checkpoint(
                 lambda hh, lp: _rglru_block(hh, lp, cfg)
             ) if cfg.remat else (lambda hh, lp: _rglru_block(hh, lp, cfg))
             return fn(h, lp), None
-        x, _ = jax.lax.scan(tail_blk, x, params.tail)
+        x, _ = common.tt_scan(tail_blk, x, params.tail, length=n_tail)
     return common.rms_norm(x, params.final_norm, cfg.norm_eps)
 
 
@@ -272,9 +274,9 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
 def _rglru_step(x, lp: RGLRULayerParams, cfg, h_state, conv_state):
     """x: (B, 1, D).  Returns (out, h_state', conv_state')."""
     h = common.rms_norm(x, lp.ln1, cfg.norm_eps)
-    main = jnp.einsum("bsd,dr->bsr", h, lp.w_x)[:, 0]      # (B, R)
+    main = common.dense_apply(h, lp.w_x)[:, 0]             # (B, R)
     gate = jax.nn.gelu(
-        jnp.einsum("bsd,dr->bsr", h, lp.w_gate)[:, 0].astype(jnp.float32)
+        common.dense_apply(h, lp.w_gate)[:, 0].astype(jnp.float32)
     )
     hist = jnp.concatenate(
         [conv_state, main[:, None, :].astype(conv_state.dtype)], axis=1
@@ -282,16 +284,16 @@ def _rglru_step(x, lp: RGLRULayerParams, cfg, h_state, conv_state):
     conv = jnp.einsum(
         "bwr,wr->br", hist.astype(jnp.float32), lp.conv_w.astype(jnp.float32)
     ) + lp.conv_b.astype(jnp.float32)
-    gr = jax.nn.sigmoid(conv @ lp.w_rg.astype(jnp.float32)
+    gr = jax.nn.sigmoid(common.dense_apply(conv, lp.w_rg)
                         + lp.b_rg.astype(jnp.float32))
-    gi = jax.nn.sigmoid(conv @ lp.w_ig.astype(jnp.float32)
+    gi = jax.nn.sigmoid(common.dense_apply(conv, lp.w_ig)
                         + lp.b_ig.astype(jnp.float32))
     log_a = -RG_C * jax.nn.softplus(lp.lam)[None, :] * gr
     a = jnp.exp(log_a)
     beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
     h_new = a * h_state + beta * (gi * conv)
     y = (h_new * gate).astype(x.dtype)[:, None, :]
-    x = x + jnp.einsum("bsr,rd->bsd", y, lp.w_out)
+    x = x + common.dense_apply(y, lp.w_out)
     hn = common.rms_norm(x, lp.ln2, cfg.norm_eps)
     out = (x + mlp_mod.mlp_apply(hn, lp.mlp, cfg.act)).astype(x.dtype)
     return out, h_new, hist[:, 1:, :]
@@ -318,7 +320,7 @@ def _attn_step(x, lp: AttnLayerParams, cfg, k_c, v_c, pos):
     scores = jnp.where(valid[None, None, None, None, :], scores, attn.NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     o = attn._gqa_out(p, v_c).astype(x.dtype)
-    x = x + jnp.einsum("bshk,hkd->bsd", o, lp.attn.wo)
+    x = x + common.dense_apply(o, lp.attn.wo, in_ndim=2)
     hn = common.rms_norm(x, lp.ln2, cfg.norm_eps)
     out = (x + mlp_mod.mlp_apply(hn, lp.mlp, cfg.act)).astype(x.dtype)
     return out, k_c, v_c
@@ -328,27 +330,28 @@ def decode_step(params: GriffinParams, cache: GriffinCache, tokens, cfg):
     x = params.embed[tokens].astype(common.cdtype(cfg))
     x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     pos = cache.pos
+    n_triples, n_tail = plan(cfg)
 
-    def triple(h, scanned):
-        tp, h1, h2, c1, c2, k_c, v_c = scanned
+    def triple(h, tp, h1, h2, c1, c2, k_c, v_c):
         h, h1n, c1n = _rglru_step(h, tp.r1, cfg, h1, c1)
         h, h2n, c2n = _rglru_step(h, tp.r2, cfg, h2, c2)
         h, k_cn, v_cn = _attn_step(h, tp.at, cfg, k_c, v_c, pos)
         return h, (h1n, h2n, c1n, c2n, k_cn, v_cn)
 
-    x, (h1, h2, c1, c2, k_all, v_all) = jax.lax.scan(
-        triple, x,
-        (params.triples, cache.h1, cache.h2, cache.conv1, cache.conv2,
-         cache.k, cache.v),
+    x, (h1, h2, c1, c2, k_all, v_all) = common.tt_scan(
+        triple, x, params.triples,
+        xs=(cache.h1, cache.h2, cache.conv1, cache.conv2,
+            cache.k, cache.v),
+        length=n_triples,
     )
     ht, ct = cache.ht, cache.convt
     if params.tail is not None:
-        def tail_fn(h, scanned):
-            lp, hs, cs = scanned
+        def tail_fn(h, lp, hs, cs):
             h, hn, cn = _rglru_step(h, lp, cfg, hs, cs)
             return h, (hn, cn)
-        x, (ht, ct) = jax.lax.scan(
-            tail_fn, x, (params.tail, cache.ht, cache.convt)
+        x, (ht, ct) = common.tt_scan(
+            tail_fn, x, params.tail, xs=(cache.ht, cache.convt),
+            length=n_tail,
         )
     hidden = common.rms_norm(x, params.final_norm, cfg.norm_eps)
     logits = common.unembed(hidden, params.embed, cfg.logit_softcap, real_vocab=cfg.vocab_size)
@@ -365,3 +368,19 @@ def prefill(params, tokens, cfg, impl: str = "xla"):
     hidden = forward(params, tokens, cfg, impl=impl)
     logits = common.unembed(hidden[:, -1:, :], params.embed, cfg.logit_softcap, real_vocab=cfg.vocab_size)
     return logits[:, 0, :]
+
+
+# TT-native serving rules: the RG-LRU projections (main/gate/recurrence/
+# input-gate/out) and the attention+MLP weights of both the scanned triples
+# and the tail layers.  Conv and Λ params are tiny and stay raw.
+_RGLRU_W = r"(w_x|w_gate|w_rg|w_ig|w_out)"
+common.register_tt_serve_rules("hybrid", [
+    common.TTServeRule(rf"^triples\.(r1|r2)\.{_RGLRU_W}$", in_ndim=1),
+    common.TTServeRule(r"^triples\.(r1|r2)\.mlp\.w_(gate|up|down)$",
+                       in_ndim=1),
+    common.TTServeRule(r"^triples\.at\.attn\.w[qkv]$", in_ndim=1),
+    common.TTServeRule(r"^triples\.at\.attn\.wo$", in_ndim=2),
+    common.TTServeRule(r"^triples\.at\.mlp\.w_(gate|up|down)$", in_ndim=1),
+    common.TTServeRule(rf"^tail\.{_RGLRU_W}$", in_ndim=1),
+    common.TTServeRule(r"^tail\.mlp\.w_(gate|up|down)$", in_ndim=1),
+])

@@ -23,32 +23,6 @@ from repro.models import common
 from repro.models import mlp as mlp_mod
 
 
-def _layers_have_tt(layers) -> bool:
-    from repro.core.tt_linear import is_tt_linear
-    return any(
-        is_tt_linear(leaf)
-        for leaf in jax.tree.leaves(layers, is_leaf=is_tt_linear)
-    )
-
-
-def _layer_at(layers, idx):
-    """Layer ``idx``'s params from the stacked tree (``idx`` may be traced).
-
-    Raw leaves gather their idx-th row — same dynamic-slice the scan's xs
-    mechanism would emit.  TTLinear leaves gather only their (L, r) lead
-    vector; the shared cores stay closure constants, so the TT-native scan
-    body keeps HLO size depth-independent without duplicating cores per
-    layer (the reason TT weights cannot ride in the scan's xs)."""
-    from repro.core.tt_linear import is_tt_linear, select_layer
-
-    def sel(leaf):
-        if is_tt_linear(leaf):
-            return select_layer(leaf, idx)
-        return jnp.take(leaf, idx, axis=0)
-
-    return jax.tree.map(sel, layers, is_leaf=is_tt_linear)
-
-
 class LayerParams(NamedTuple):
     attn: attn.AttnParams
     mlp: Optional[mlp_mod.MLPParams]
@@ -134,23 +108,13 @@ def forward(
     if cfg.remat:
         fn = jax.checkpoint(fn)
 
-    if _layers_have_tt(params.layers):
-        # TT-native weights: scan over the layer INDEX and gather each
-        # layer's params inside the body (see _layer_at) — TT cores are
-        # shared closure constants the scan must not slice.
-        def body_tt(h, scanned):
-            idx, is_global = scanned
-            return fn(h, _layer_at(params.layers, idx), is_global), None
-
-        x, _ = jax.lax.scan(
-            body_tt, x, (jnp.arange(cfg.num_layers), flags)
-        )
-    else:
-        def body(h, scanned):
-            lp, is_global = scanned
-            return fn(h, lp, is_global), None
-
-        x, _ = jax.lax.scan(body, x, (params.layers, flags))
+    # TT-aware layer scan (common.tt_scan): TT-native weights scan the
+    # layer index and gather lead vectors in-body; cores stay closure
+    # constants the scan must not slice.
+    x, _ = common.tt_scan(
+        lambda h, lp, is_global: (fn(h, lp, is_global), None),
+        x, params.layers, xs=(flags,), length=cfg.num_layers,
+    )
     return common.rms_norm(x, params.final_norm, cfg.norm_eps)
 
 
@@ -230,26 +194,12 @@ def decode_step(
             f = mlp_mod.mlp_apply(hh, lp.mlp, cfg.act)
         return (h + f).astype(h.dtype), (k_c, v_c)
 
-    if _layers_have_tt(params.layers):
-        # TT-native decode: weights never leave TT form — the scan carries
-        # only the layer index; cores are closure constants (see _layer_at)
-        def body_tt(h, scanned):
-            idx, is_global, k_c, v_c = scanned
-            return step(h, _layer_at(params.layers, idx), is_global,
-                        k_c, v_c)
-
-        x, (k_all, v_all) = jax.lax.scan(
-            body_tt, x,
-            (jnp.arange(cfg.num_layers), flags, cache.k, cache.v),
-        )
-    else:
-        def body(h, scanned):
-            lp, is_global, k_c, v_c = scanned
-            return step(h, lp, is_global, k_c, v_c)
-
-        x, (k_all, v_all) = jax.lax.scan(
-            body, x, (params.layers, flags, cache.k, cache.v)
-        )
+    # TT-native decode: weights never leave TT form — common.tt_scan
+    # carries only the layer index; cores are closure constants
+    x, (k_all, v_all) = common.tt_scan(
+        step, x, params.layers, xs=(flags, cache.k, cache.v),
+        length=cfg.num_layers,
+    )
     hidden = common.rms_norm(x, params.final_norm, cfg.norm_eps)
     logits = logits_fn(params, hidden, cfg)
     return logits[:, 0, :], DecodeCache(k=k_all, v=v_all, pos=pos + 1)
@@ -268,3 +218,20 @@ def prefill(
                      impl=impl)
     logits = logits_fn(params, hidden[:, -1:, :], cfg)
     return logits[:, 0, :]
+
+
+# ---------------------------------------------------------------------------
+# TT-native serving rules (registered beside the model, per family)
+# ---------------------------------------------------------------------------
+# MoE expert banks (L, E, D, F) use stack=2/experts=1: both leading axes
+# fold into the lead table but the expert mode stays a batch axis, served
+# by the expert-batched chain through ``common.expert_apply``.
+_TT_RULES = [
+    common.TTServeRule(r"^layers\.attn\.w[qkv]$", in_ndim=1),
+    common.TTServeRule(r"^layers\.attn\.wo$", in_ndim=2),
+    common.TTServeRule(r"^layers\.mlp\.w_(gate|up|down)$", in_ndim=1),
+    common.TTServeRule(r"^layers\.moe\.w_(gate|up|down)$", in_ndim=1,
+                       stack=2, experts=1),
+]
+for _fam in ("dense", "moe", "vlm"):
+    common.register_tt_serve_rules(_fam, _TT_RULES)

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.tt_contract.ops import (
-    tt_contract, tt_contract_ref, tt_dense_ref,
+    tt_contract, tt_contract_batched, tt_contract_batched_ref,
+    tt_contract_ref, tt_dense_ref,
 )
 
 
@@ -69,3 +70,105 @@ def test_tt_contract_uneven_batch(rng):
     np.testing.assert_allclose(
         y, np.asarray(x) @ w, atol=1e-5 * max(np.abs(w).max(), 1.0)
     )
+
+
+# ---------------------------------------------------------------------------
+# Deep-chain ref fallback: the einsum chain itself vs dense materialization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode_dims,ranks,split", [
+    ([8, 16, 16, 16], [3, 5, 7], 1),
+    ([8, 16, 16, 16], [3, 5, 7], 3),
+    ([4, 6, 8, 10, 12, 6], [2, 3, 4, 3, 2], 3),   # depth-6
+])
+def test_tt_contract_ref_deep_matches_dense(rng, mode_dims, ranks, split):
+    """Depth >= 4 never fuses — pin the fallback oracle itself against the
+    reconstruct-then-matmul baseline across split positions."""
+    cores = _mk_chain(rng, mode_dims, ranks)
+    n_in = int(np.prod(mode_dims[:split]))
+    x = jnp.asarray(rng.standard_normal((7, n_in)), jnp.float32)
+    y = np.asarray(tt_contract_ref(x, cores, split))
+    w = np.asarray(tt_dense_ref(cores, split))
+    y_dense = np.asarray(x) @ w
+    np.testing.assert_allclose(
+        y, y_dense, atol=1e-5 * max(np.abs(y_dense).max(), 1e-6)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Expert-batched chain (MoE banks): vmapped kernel vs extended ref oracle
+# ---------------------------------------------------------------------------
+
+BATCHED_CASES = [
+    ([64, 96], [5], 1),              # 2-core fused per expert
+    ([32, 4, 24], [5, 7], 1),        # 3-core fused, split 1
+    ([4, 16, 48], [5, 7], 2),        # 3-core fused, split 2
+    ([8, 8, 8, 8], [3, 4, 5], 2),    # depth-4 per-expert fallback
+]
+
+
+@pytest.mark.parametrize("mode_dims,ranks,split", BATCHED_CASES)
+def test_tt_contract_batched_matches_ref_and_dense(rng, mode_dims, ranks,
+                                                   split):
+    """Expert-batched dispatch == extended einsum oracle == per-expert
+    dense matmuls (experts share tail cores, differ in the lead-absorbed
+    first core — exactly what an expert-axis TTLinear hands down)."""
+    e, b = 5, 6
+    g0b = jnp.asarray(
+        rng.standard_normal((e, mode_dims[0], ranks[0])), jnp.float32)
+    rest = _mk_chain(rng, mode_dims, ranks)[1:]
+    n_in = int(np.prod(mode_dims[:split]))
+    x3 = jnp.asarray(rng.standard_normal((e, b, n_in)), jnp.float32)
+
+    y = np.asarray(tt_contract_batched(x3, g0b, rest, split))
+    y_ref = np.asarray(tt_contract_batched_ref(x3, g0b, rest, split))
+    scale = max(np.abs(y_ref).max(), 1e-6)
+    np.testing.assert_allclose(y, y_ref, atol=1e-5 * scale)
+    for ei in range(e):
+        w = np.asarray(tt_dense_ref([g0b[ei]] + rest, split))
+        np.testing.assert_allclose(
+            y[ei], np.asarray(x3[ei]) @ w, atol=1e-5 * scale
+        )
+
+
+# ---------------------------------------------------------------------------
+# VMEM dispatch gate: the depth-3 intermediate tile must be accounted
+# ---------------------------------------------------------------------------
+
+def test_fits_vmem_counts_depth3_intermediate(rng, monkeypatch):
+    """Regression: a chain whose (bb, n_mid*r2) intermediate pushes the
+    fused tile just past the budget must fall back to tt_contract_ref —
+    the old accounting (acts + cores only) would have fused it."""
+    from repro.kernels import common as kcommon
+    from repro.kernels.tt_contract import kernel as kernel_mod
+    from repro.kernels.tt_contract import ops
+
+    cores = _mk_chain(rng, [8, 16, 4], [4, 8])     # n_mid*r2 = 128
+    x = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    bb = kernel_mod._grid_1d(32)
+    n_out = 16 * 4
+    acts_and_cores = 4 * (bb * (8 + n_out) + sum(int(g.size) for g in cores))
+    interm = 4 * bb * 16 * 8                       # the unaccounted tile
+    # budget between the old and the corrected footprint: old accounting
+    # says "fits", corrected says "doesn't"
+    budget = 2 * (acts_and_cores + interm // 2)
+    assert acts_and_cores < budget // 2 < acts_and_cores + interm
+    monkeypatch.setattr(kcommon, "VMEM_BUDGET", budget)
+
+    assert not ops._fits_vmem(x, cores, n_out, split=1)
+
+    def boom(*a, **k):                             # fused path must not run
+        raise AssertionError("dispatched past the corrected VMEM budget")
+    monkeypatch.setattr(kernel_mod, "tt_contract_3", boom)
+    y = np.asarray(ops.tt_contract(x, cores, split=1))
+    w = np.asarray(tt_dense_ref(cores, 1))
+    y_dense = np.asarray(x) @ w
+    np.testing.assert_allclose(
+        y, y_dense, atol=1e-5 * max(np.abs(y_dense).max(), 1e-6)
+    )
+
+    # control: with the intermediate inside the budget the fused path runs
+    monkeypatch.setattr(
+        kcommon, "VMEM_BUDGET", 4 * (acts_and_cores + 2 * interm)
+    )
+    assert ops._fits_vmem(x, cores, n_out, split=1)

@@ -12,6 +12,7 @@ from repro.core import (
     select_layer,
     spectral_decay_pytree,
     tt_apply,
+    tt_apply_experts,
     tt_linear_from_tt,
     tt_param_bytes,
     tt_reconstruct,
@@ -79,6 +80,59 @@ def test_tt_linear_rejects_padded_dims(rng):
     assert tt_linear_from_tt(tt, (5, 32, 48), stack=1, in_ndim=1) is None
 
 
+def test_select_layer_out_of_range_clamps(rng):
+    """Pinned behavior: an out-of-range layer index — traced or concrete —
+    CLAMPS to the last layer (mode="clip"), never NaN-fills.  Covers both
+    the TTLinear lead gather and the raw-leaf gather in layer_at."""
+    shape = (3, 32, 48)
+    w = _decayed(rng, shape)
+    lin = tt_linear_from_tt(ttd(w, eps=0.1, dims=shape), shape, 1, 1,
+                            dtype=jnp.float32)
+    raw = jnp.asarray(rng.standard_normal((3, 8)), jnp.float32)
+    tree = {"tt": lin, "raw": raw}
+
+    last = model_common.layer_at(tree, 2)
+    for idx in (7, jnp.int32(7)):
+        over = model_common.layer_at(tree, idx)
+        np.testing.assert_array_equal(
+            np.asarray(over["tt"].lead), np.asarray(last["tt"].lead)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(over["raw"]), np.asarray(last["raw"])
+        )
+    # under jit (the traced-scan path) the same clamp applies
+    over_jit = jax.jit(lambda i: model_common.layer_at(tree, i))(99)
+    np.testing.assert_array_equal(
+        np.asarray(over_jit["tt"].lead), np.asarray(last["tt"].lead)
+    )
+    assert np.isfinite(np.asarray(over_jit["raw"])).all()
+
+
+# ---------------------------------------------------------------------------
+# Expert-bank TTLinear (MoE): batched apply == per-expert dense slices
+# ---------------------------------------------------------------------------
+
+def test_tt_linear_expert_bank_matches_reconstruct(rng):
+    shape = (3, 4, 32, 48)                          # (L, E, D, F)
+    w = _decayed(rng, shape)
+    tt = ttd(w, eps=0.05, dims=shape)
+    lin = tt_linear_from_tt(tt, shape, stack=2, in_ndim=1,
+                            dtype=jnp.float32, experts=1)
+    assert lin is not None
+    assert lin.experts == 4
+    assert lin.lead.shape == (3, 4, lin.cores[0].shape[0])
+    w_rec = np.asarray(tt_reconstruct(tt)).reshape(shape)
+    x = jnp.asarray(rng.standard_normal((4, 5, 32)), jnp.float32)
+    for layer in range(shape[0]):
+        sel = select_layer(lin, layer)
+        assert sel.lead.shape == (4, lin.cores[0].shape[0])
+        y = np.asarray(tt_apply_experts(x, sel))    # (E, 5, F)
+        for e in range(shape[1]):
+            y_ref = np.asarray(x[e]) @ w_rec[layer, e]
+            scale = max(np.abs(y_ref).max(), 1e-6)
+            np.testing.assert_allclose(y[e], y_ref, atol=1e-4 * scale)
+
+
 # ---------------------------------------------------------------------------
 # dense_apply dispatch
 # ---------------------------------------------------------------------------
@@ -99,6 +153,90 @@ def test_dense_apply_raw_matches_einsum(rng):
     np.testing.assert_allclose(
         np.asarray(out2, np.float32), np.asarray(ref2, np.float32), atol=1e-1
     )
+
+
+# ---------------------------------------------------------------------------
+# Accounting + conversion plumbing
+# ---------------------------------------------------------------------------
+
+def test_tt_param_bytes_skips_non_array_leaves(rng):
+    """Pytrees carrying Python scalars (step counters in checkpoint trees)
+    must not crash the byte accounting — non-array leaves are skipped."""
+    arr = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    tree = {"w": arr, "step": 7, "lr": 1e-3, "done": False}
+    assert tt_param_bytes(tree) == arr.size * 4
+    # numpy scalars still count (they carry size/dtype)
+    tree["np_step"] = np.int32(7)
+    assert tt_param_bytes(tree) == arr.size * 4 + 4
+
+
+def _payload_one(rng):
+    params = {"layers": {"mlp": {"w_gate": jnp.asarray(
+        _decayed(rng, (3, 64, 96)), jnp.bfloat16)}}}
+    comp = TTCompressor(CompressionPolicy(eps=0.1, min_size=1024))
+    payload, _ = comp.compress(params)
+    return payload
+
+
+def test_tt_native_params_core_dtype_sentinel(rng):
+    """None is the only "unset" sentinel: explicit dtypes are honored even
+    when they'd compare falsy/equal-to-default after normalization, and
+    None falls back to each leaf's original dtype."""
+    payload = _payload_one(rng)
+
+    def tt_leaf(tree):
+        leaves = [leaf for leaf in jax.tree.leaves(tree, is_leaf=is_tt_linear)
+                  if is_tt_linear(leaf)]
+        assert len(leaves) == 1
+        return leaves[0]
+
+    default = tt_leaf(model_common.tt_native_params(payload))
+    assert all(c.dtype == jnp.bfloat16 for c in default.cores)  # orig dtype
+    explicit = tt_leaf(model_common.tt_native_params(
+        payload, core_dtype=jnp.float32))
+    assert all(c.dtype == jnp.float32 for c in explicit.cores)
+    # an explicit dtype equal to the original must take the same branch as
+    # any other explicit dtype (the old `or` collapsed this case)
+    same = tt_leaf(model_common.tt_native_params(
+        payload, core_dtype=jnp.bfloat16))
+    assert all(c.dtype == jnp.bfloat16 for c in same.cores)
+
+
+def test_tt_serve_rules_registry_covers_every_family():
+    """Each family registers its own rule set beside its model module."""
+    for fam in ("dense", "moe", "vlm", "encdec", "ssm", "hybrid"):
+        assert model_common.tt_serve_rules(fam), fam
+    union = model_common.tt_serve_rules(None)
+    assert len(union) > len(model_common.tt_serve_rules("ssm"))
+    # unknown family: no rules, everything reconstructs (no crash)
+    assert model_common.tt_serve_rules("no-such-family") == ()
+
+
+def test_tt_checkpoint_family_guard(rng, tmp_path):
+    """A payload saved with a recorded family refuses to serve a different
+    arch family; the matching family (or a legacy manifest without one)
+    loads normally."""
+    from argparse import Namespace
+    from types import SimpleNamespace
+
+    from repro.checkpoint.checkpoint import save_tt_payload
+    from repro.launch import serve as serve_mod
+
+    payload = _payload_one(rng)
+    like = jax.tree.map(
+        lambda c: jnp.zeros(c.orig_shape, c.orig_dtype), payload,
+        is_leaf=lambda x: hasattr(x, "kind"),
+    )
+    path = str(tmp_path / "ttck")
+    save_tt_payload(path, payload, extra={"eps": 0.1}, family="ssm")
+    args = Namespace(tt_checkpoint=path, tt_eps=0.2, tt_alpha=1.0,
+                     save_tt_checkpoint=None)
+
+    with pytest.raises(ValueError, match="family"):
+        serve_mod._tt_setup(like, args, SimpleNamespace(family="dense"))
+    params_tt, loaded, line = serve_mod._tt_setup(
+        like, args, SimpleNamespace(family="ssm"))
+    assert "weight bytes" in line
 
 
 # ---------------------------------------------------------------------------

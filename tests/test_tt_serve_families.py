@@ -1,0 +1,117 @@
+"""TT-native serving coverage: every family in the zoo serves from cores.
+
+One reduced config per architecture family (transformer/dense, encdec,
+ssm, hybrid, moe) goes through the full pipeline — spectral-decayed init →
+TTCompressor payload → ``tt_native_params(family=...)`` → decode + prefill
+— and must match reconstruct-then-serve inside the shared ``logit_parity``
+bound while shrinking resident weight bytes.  This is the test-side twin of
+the ``benchmarks/tt_serve.run_families`` CI lane.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressionPolicy,
+    TTCompressor,
+    is_tt_linear,
+    spectral_decay_pytree,
+    tt_param_bytes,
+)
+from repro.models import common as model_common
+
+
+FAMILY_CASES = [
+    # (arch, family, leaves that must serve TT-native)
+    ("seamless-m4t-large-v2", "encdec", 18),   # enc+dec attn/cross/mlp
+    ("mamba2-1.3b", "ssm", 2),                 # w_in + w_out
+    ("recurrentgemma-2b", "hybrid", 21),       # rglru gates + attn + mlps
+    ("olmoe-1b-7b", "moe", 7),                 # attn + 3 expert banks
+]
+
+
+def _setup(arch, family):
+    from repro.configs import get_config
+    from repro.models.registry import build
+
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    params = spectral_decay_pytree(model.init(jax.random.PRNGKey(0)))
+    comp = TTCompressor(CompressionPolicy(eps=0.2, min_size=8192))
+    payload, _ = comp.compress(params)
+    params_rx = comp.decompress(payload)
+    params_tt = model_common.tt_native_params(payload, family=family)
+    return cfg, model, params_rx, params_tt
+
+
+def _fill_batch(rng, model, cfg, b, plen):
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, plen), np.int32))}
+    spec = model.prefill_batch_spec(
+        b, plen + (cfg.frontend_len if cfg.frontend else 0))
+    for k, s in spec.items():
+        if k != "tokens":
+            batch[k] = jnp.asarray(rng.standard_normal(s.shape), s.dtype)
+    return batch
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,family,n_tt", FAMILY_CASES)
+def test_family_serves_tt_native(arch, family, n_tt):
+    cfg, model, params_rx, params_tt = _setup(arch, family)
+
+    tt_leaves = [
+        leaf for leaf in jax.tree.leaves(params_tt, is_leaf=is_tt_linear)
+        if is_tt_linear(leaf)
+    ]
+    assert len(tt_leaves) == n_tt, [type(x) for x in tt_leaves]
+    if family == "moe":
+        banks = [l for l in tt_leaves if l.experts]
+        assert len(banks) == 3                      # w_gate / w_up / w_down
+        assert all(l.experts == cfg.moe.num_experts for l in banks)
+    assert tt_param_bytes(params_tt) < tt_param_bytes(params_rx)
+
+    rng = np.random.default_rng(0)
+    b, plen = 2, 5
+    prompts = rng.integers(0, cfg.vocab_size, (b, plen), np.int32)
+    decode = jax.jit(model.decode_step)
+    c1 = model.init_cache(b, plen)
+    c2 = model.init_cache(b, plen)
+    for i in range(plen):
+        tok = jnp.asarray(prompts[:, i:i + 1])
+        l1, c1 = decode(params_rx, c1, tok)
+        l2, c2 = decode(params_tt, c2, tok)
+    d, scale, agree = model_common.logit_parity(l2, l1)
+    assert d <= max(0.05 * scale, 1e-3), (arch, d, scale)
+    assert agree == 1.0
+
+    # prefill/forward takes the TT-aware scans too (encode for encdec,
+    # triple+tail for hybrid, SSD chunked path for ssm, MoE dispatch)
+    batch = _fill_batch(rng, model, cfg, b, plen)
+    p1 = model.prefill(params_rx, batch)
+    p2 = model.prefill(params_tt, batch)
+    dp, pscale, _ = model_common.logit_parity(p2, p1)
+    assert dp <= max(0.05 * pscale, 1e-3), (arch, dp, pscale)
+
+
+@pytest.mark.slow
+def test_encdec_memory_cache_from_tt_cores():
+    """Cross-attn memory K/V precompute works on TT-native dec layers
+    (lax.map over layer indices instead of vmap over stacked arrays)."""
+    from repro.models import encdec as encdec_mod
+
+    cfg, model, params_rx, params_tt = _setup(
+        "seamless-m4t-large-v2", "encdec")
+    rng = np.random.default_rng(1)
+    memory = jnp.asarray(
+        rng.standard_normal((2, cfg.frontend_len, cfg.d_model)), jnp.bfloat16)
+    cache = model.init_cache(2, 8)
+    c_tt = encdec_mod.precompute_memory_cache(params_tt, memory, cfg, cache)
+    c_rx = encdec_mod.precompute_memory_cache(params_rx, memory, cfg, cache)
+    for a, b in ((c_tt.mem_k, c_rx.mem_k), (c_tt.mem_v, c_rx.mem_v)):
+        a = np.asarray(a, np.float32)
+        b = np.asarray(b, np.float32)
+        scale = max(np.abs(b).max(), 1e-6)
+        np.testing.assert_allclose(a, b, atol=0.05 * scale)
