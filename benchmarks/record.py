@@ -1,0 +1,51 @@
+"""Machine-readable benchmark persistence: ``BENCH_<name>.json``.
+
+Benchmarks historically printed their tables and exited — nothing survived
+the run, so perf trajectories across PRs lived in commit messages.  Lanes
+now ALSO dump their headline numbers (tok/s, bytes, parity flags) as one
+flat JSON file per lane at the repo root, overwritten on each run:
+
+    BENCH_decode.json      benchmarks/decode_driver.py
+    BENCH_tt_serve.json    benchmarks/tt_serve.py
+
+Set ``BENCH_DIR`` to redirect the output directory (CI artifacts, scratch
+runs).  Files are written atomically (tmp + rename) so a crashed benchmark
+never leaves a truncated record behind.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+
+def bench_dir() -> str:
+    env = os.environ.get("BENCH_DIR")
+    if env:
+        return env
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_path(name: str) -> str:
+    return os.path.join(bench_dir(), f"BENCH_{name}.json")
+
+
+def write_bench(name: str, payload: dict) -> str:
+    """Persist one lane's results; returns the path written."""
+    path = bench_path(name)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(
+        dir=os.path.dirname(path), prefix=f".BENCH_{name}.", suffix=".tmp"
+    )
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True, default=float)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    print(f"[bench] results -> {path}")
+    return path

@@ -14,10 +14,19 @@
   tt_families  TT-native coverage sweep — logit parity + byte reduction on
             one reduced config per family (transformer/encdec/mamba2/
             rglru/MoE); a family regressing to reconstruct fails the lane
+  decode_driver  Serving-runtime lane — python-loop vs fused-scan decode
+            driver (token parity + tok/s, dense and TT weights) and
+            continuous batching vs padded lockstep on a heterogeneous
+            request mix
 
 ``--fast`` propagates to every benchmark that accepts a ``fast=`` kwarg
 (smaller sweeps, single method) — the CI smoke lane that catches
 benchmark-script rot without paying full benchmark wall-clock.
+
+Headline numbers additionally persist as ``BENCH_<lane>.json`` at the repo
+root (``benchmarks/record.py``) so the perf trajectory is tracked across
+PRs, not just printed: ``decode_driver`` → BENCH_decode.json, ``tt_serve``/
+``tt_families`` → BENCH_tt_serve.json.
 """
 
 from __future__ import annotations
@@ -77,6 +86,11 @@ def bench_tt_families(fast: bool = False):
     tt_serve.run_families(fast=fast)
 
 
+def bench_decode_driver(fast: bool = False):
+    from benchmarks import decode_driver
+    decode_driver.run(fast=fast)
+
+
 ALL = {
     "table1": bench_table1,
     "table3": bench_table3,
@@ -86,6 +100,7 @@ ALL = {
     "kernels": bench_kernels,
     "tt_serve": bench_tt_serve,
     "tt_families": bench_tt_families,
+    "decode_driver": bench_decode_driver,
 }
 
 

@@ -24,19 +24,17 @@ import jax
 import numpy as np
 
 
-def _decode(model, params, prompts, gen, max_len):
-    """One serving run via the launcher's own loop (single source of truth
-    for prefill-by-stepping + greedy decode + timing boundaries)."""
-    from repro.launch.serve import _decode_loop
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
-    out = _decode_loop(
-        decode, params, model.init_cache(prompts.shape[0], max_len),
-        prompts, gen,
-    )
+def _decode(model, params, prompts, gen, max_len, driver="fused"):
+    """One serving run via the engine (single source of truth for
+    prefill-by-stepping + greedy decode + timing boundaries)."""
+    from repro.launch.engine import generate
+    out = generate(model, params, prompts, gen, max_len=max_len,
+                   driver=driver)
     return out["decode_t"], out["prompt_logits"]
 
 
-def run(fast: bool = False, arch: str = "gemma3-1b", eps: float = 0.2):
+def run(fast: bool = False, arch: str = "gemma3-1b", eps: float = 0.2,
+        write_json: bool = True):
     from repro.configs import get_config
     from repro.core import (
         CompressionPolicy, TTCompressor, spectral_decay_pytree,
@@ -91,8 +89,13 @@ def run(fast: bool = False, arch: str = "gemma3-1b", eps: float = 0.2):
     tt_b = rows[1][2]
     assert tt_b < dense_b, (tt_b, dense_b)
     print(f"resident-weight reduction: {dense_b / tt_b:.2f}x")
-    return {"arch": arch, "max_diff": d, "agreement": agree,
-            "dense_bytes": dense_b, "tt_bytes": tt_b}
+    result = {"arch": arch, "max_diff": d, "agreement": agree,
+              "dense_bytes": dense_b, "tt_bytes": tt_b,
+              "reconstruct_tps": rows[0][1], "tt_native_tps": rows[1][1]}
+    if write_json:
+        from benchmarks.record import write_bench
+        write_bench("tt_serve", {"archs": {arch: result}})
+    return result
 
 
 # one reduced config per architecture family: transformer (dense), encdec,
@@ -113,13 +116,16 @@ def run_families(fast: bool = False, eps: float = 0.2):
     reconstruct-then-serve and (b) shrink resident weight bytes vs dense —
     the two asserts inside ``run`` — so a family regressing to
     reconstruct-on-load fails the build, not just a benchmark number."""
-    results = [run(fast=fast, arch=arch, eps=eps) for arch in FAMILY_ARCHS]
+    results = [run(fast=fast, arch=arch, eps=eps, write_json=False)
+               for arch in FAMILY_ARCHS]
     print("\nTT-native coverage (family sweep)")
     print(f"{'arch':<24}{'max|Δ|':>10}{'agree':>8}{'byte reduction':>16}")
     for r in results:
         print(f"{r['arch']:<24}{r['max_diff']:>10.2e}"
               f"{r['agreement']:>8.0%}"
               f"{r['dense_bytes'] / r['tt_bytes']:>15.2f}x")
+    from benchmarks.record import write_bench
+    write_bench("tt_serve", {"archs": {r["arch"]: r for r in results}})
     return results
 
 

@@ -81,24 +81,21 @@ def _demo(args) -> None:
           f"(ε={args.eps})")
     assert max(errs) <= args.eps * 1.05 + 1e-2, (max(errs), args.eps)
 
-    # one decode protocol for every pass: the launcher's own loop
-    from repro.launch.serve import _decode_loop
+    # one decode protocol for every pass: the serving engine's fused driver
+    from repro.launch.engine import generate
 
     b = args.batch
     max_len = args.prompt_len + args.gen
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
     prompts = rng.integers(0, cfg.vocab_size, (b, args.prompt_len), np.int32)
 
-    run = _decode_loop(decode, params_tt, model.init_cache(b, max_len),
-                       prompts, args.gen)
+    run = generate(model, params_tt, prompts, args.gen, max_len=max_len)
     dt = run["prefill_t"] + run["decode_t"]
     print(f"[serve] {b} requests × {args.gen} tokens TT-native in {dt:.1f}s "
           f"({b * args.gen / dt:.1f} tok/s on CPU)")
 
     # --- oracle: reconstruct-then-serve must match to numerical precision -
     # (gen=1: only the position-aligned post-prompt logits are compared)
-    oracle = _decode_loop(decode, params_rx, model.init_cache(b, max_len),
-                          prompts, 1)
+    oracle = generate(model, params_rx, prompts, 1, max_len=max_len)
     diff, scale, agree = model_common.logit_parity(
         run["prompt_logits"], oracle["prompt_logits"]
     )
@@ -112,8 +109,7 @@ def _demo(args) -> None:
 
     # greedy decode with the ORIGINAL dense weights should mostly agree —
     # this one is ε-limited (not rounding-limited), so report, don't assert
-    orig = _decode_loop(decode, params, model.init_cache(b, max_len),
-                        prompts, 1)
+    orig = generate(model, params, prompts, 1, max_len=max_len)
     _, _, agree_orig = model_common.logit_parity(
         run["prompt_logits"], orig["prompt_logits"]
     )

@@ -69,23 +69,32 @@ def _tt3_kernel(x_ref, g0_ref, g1_ref, g2_ref, o_ref, *, split, n_mid, bb):
         o_ref[...] = _dot(t, g2)                          # (bb, n3)
 
 
-def _grid_1d(b: int, cap: int = 512):
+DEFAULT_TILE_CAP = 512
+
+
+def _grid_1d(b: int, cap: int = DEFAULT_TILE_CAP):
     """Token-dim tile: first of (cap, cap/2, cap/4) that divides b, else the
     whole batch in one block.  ops.py gates kernel eligibility on the VMEM
     footprint of the tile THIS returns, so an indivisible huge batch (whole-b
-    block) falls back to the unfused chain instead of blowing VMEM."""
+    block) falls back to the unfused chain instead of blowing VMEM.
+
+    ``cap`` is the tunable upper bound (ops.py resolves it from the
+    TT_CONTRACT_TILE env var / call argument, growing it when the token
+    extent allows) — bigger tiles amortize grid overhead per launch, the
+    VMEM gate keeps them honest."""
     for t in (cap, cap // 2, cap // 4):
         if b > t and b % t == 0:
             return t
     return b
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def tt_contract_2(x, g0, g1, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_cap"))
+def tt_contract_2(x, g0, g1, interpret: bool = False,
+                  tile_cap: int = DEFAULT_TILE_CAP):
     """(B, n1) · (n1, r1) · (r1, n2) → (B, n2), one launch."""
     b, n1 = x.shape
     n2 = g1.shape[1]
-    bb = _grid_1d(b)
+    bb = _grid_1d(b, tile_cap)
     return pl.pallas_call(
         _tt2_kernel,
         grid=(b // bb,),
@@ -101,13 +110,15 @@ def tt_contract_2(x, g0, g1, interpret: bool = False):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("split", "n_mid", "n_out", "interpret")
+    jax.jit,
+    static_argnames=("split", "n_mid", "n_out", "interpret", "tile_cap"),
 )
 def tt_contract_3(x, g0, g1, g2, *, split: int, n_mid: int, n_out: int,
-                  interpret: bool = False):
+                  interpret: bool = False,
+                  tile_cap: int = DEFAULT_TILE_CAP):
     """Fused 3-core chain; ``g1`` comes pre-flattened 2D from ops.py."""
     b, n_in = x.shape
-    bb = _grid_1d(b)
+    bb = _grid_1d(b, tile_cap)
     kern = functools.partial(_tt3_kernel, split=split, n_mid=n_mid, bb=bb)
     return pl.pallas_call(
         kern,

@@ -16,7 +16,8 @@ einsums accumulate.
 
 from __future__ import annotations
 
-from typing import Sequence
+import os
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,13 +29,36 @@ from repro.kernels.tt_contract.ref import (
 )
 
 
-def _fits_vmem(x2, cores, n_out: int, split: int) -> bool:
+def resolve_tile_cap(b: int, tile: Optional[int] = None):
+    """Token-dim tile cap candidates for a (B, N_in) activation extent,
+    best first.
+
+    Priority: explicit ``tile`` argument > TT_CONTRACT_TILE env var >
+    adaptive default.  An explicit cap (arg or env) is a single candidate —
+    tuning intent is never second-guessed; if its footprint fails the VMEM
+    gate the chain falls back unfused, not to a different tile.  The
+    adaptive default grows past the historical 512 cap when the flattened
+    batch×token extent divides cleanly (fewer grid steps per launch), but
+    keeps the smaller caps as fallbacks so growing the cap can only ever
+    ADD fused coverage: a shape whose big-tile footprint flunks the gate
+    retries at the tile it would have used before."""
+    if tile is not None:
+        return (int(tile),)
+    env = os.environ.get("TT_CONTRACT_TILE")
+    if env:
+        return (int(env),)
+    caps = [cap for cap in (2048, 1024) if b >= cap and b % cap == 0]
+    return (*caps, _kernel.DEFAULT_TILE_CAP)
+
+
+def _fits_vmem(x2, cores, n_out: int, split: int,
+               tile_cap: int = _kernel.DEFAULT_TILE_CAP) -> bool:
     """f32 bytes of one grid step at the tile _grid_1d will actually pick:
     activation tile in + out, cores fully resident, PLUS the largest
     intermediate the fused body materializes — the depth-3 expand path's
     ``(bb, n_mid·r2)`` tile can dwarf both activation tiles and used to be
     unaccounted, letting oversized chains onto the fused path."""
-    bb = _kernel._grid_1d(x2.shape[0])
+    bb = _kernel._grid_1d(x2.shape[0], tile_cap)
     n_in = x2.shape[1]
     if len(cores) == 2:
         interm = bb * cores[0].shape[1]                   # t = x·g0 (bb, r1)
@@ -60,6 +84,7 @@ def tt_contract(
     cores: Sequence[jax.Array],     # [g0 (n1,r1), g_k (r,n,s)..., last s==1]
     split: int,
     interpret: bool | None = None,
+    tile: Optional[int] = None,     # token-dim tile cap override
 ) -> jax.Array:                     # (B, N_out) float32
     """Contract activations straight through TT cores (no dense weight)."""
     if interpret is None:
@@ -69,14 +94,21 @@ def tt_contract(
     n_out = 1
     for g in cores[split:]:
         n_out *= g.shape[1]
+    # first candidate cap whose grid-step footprint clears the VMEM gate
+    cap = None
+    for c in resolve_tile_cap(x2.shape[0], tile):
+        if _fits_vmem(x2, cores, n_out, split, c):
+            cap = c
+            break
 
-    if depth == 2 and split == 1 and _fits_vmem(x2, cores, n_out, split):
+    if depth == 2 and split == 1 and cap is not None:
         g0, g1 = cores
         return _kernel.tt_contract_2(
-            x2, g0, g1[:, :, 0] if g1.ndim == 3 else g1, interpret=interpret
+            x2, g0, g1[:, :, 0] if g1.ndim == 3 else g1, interpret=interpret,
+            tile_cap=cap,
         )
 
-    if depth == 3 and split in (1, 2) and _fits_vmem(x2, cores, n_out, split):
+    if depth == 3 and split in (1, 2) and cap is not None:
         g0, g1, g2 = cores
         g2m = g2[:, :, 0] if g2.ndim == 3 else g2          # (r2, n3)
         if split == 1:
@@ -84,13 +116,13 @@ def tt_contract(
             g1f = g1.reshape(r1, n2 * r2)
             return _kernel.tt_contract_3(
                 x2, g0, g1f, g2m, split=1, n_mid=n2,
-                n_out=n2 * g2m.shape[1], interpret=interpret,
+                n_out=n2 * g2m.shape[1], interpret=interpret, tile_cap=cap,
             )
         r1, n2, r2 = g1.shape
         g1p = g1.transpose(1, 0, 2).reshape(n2 * r1, r2)   # (n2·r1, r2)
         return _kernel.tt_contract_3(
             x2, g0, g1p, g2m, split=2, n_mid=n2,
-            n_out=g2m.shape[1], interpret=interpret,
+            n_out=g2m.shape[1], interpret=interpret, tile_cap=cap,
         )
 
     return tt_contract_ref(x2, cores, split)
@@ -102,6 +134,7 @@ def tt_contract_batched(
     cores: Sequence[jax.Array],     # shared tail [(r,n,s), ...], last s==1
     split: int,
     interpret: bool | None = None,
+    tile: Optional[int] = None,
 ) -> jax.Array:                     # (E, B, N_out) float32
     """Expert-batched TT chain: the whole bank in one launch.
 
@@ -113,11 +146,11 @@ def tt_contract_batched(
     rest = list(cores)
     return jax.vmap(
         lambda x2, g0: tt_contract(x2, [g0] + rest, split,
-                                   interpret=interpret)
+                                   interpret=interpret, tile=tile)
     )(x3, g0b)
 
 
 __all__ = [
-    "tt_contract", "tt_contract_batched", "tt_contract_batched_ref",
-    "tt_contract_ref", "tt_dense_ref",
+    "resolve_tile_cap", "tt_contract", "tt_contract_batched",
+    "tt_contract_batched_ref", "tt_contract_ref", "tt_dense_ref",
 ]

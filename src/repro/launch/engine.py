@@ -1,0 +1,305 @@
+"""Serving engine: fused on-device decode driver + continuous batching.
+
+Two layers, both family-agnostic (they only touch the uniform
+``decode_step(params, cache, tokens) -> (logits, cache)`` /
+``init_cache(batch, max_len)`` Model surface):
+
+``generate(model, params, prompts, gen, driver=...)``
+    One uniform batch, two drivers:
+
+    * ``python`` — the legacy oracle: one jitted ``decode_step`` per token,
+      driven from Python.  Pays a host→device dispatch round-trip plus a
+      host sync (the argmax readback) per token.
+    * ``fused``  — the whole generation (prefill-by-stepping → sample →
+      append → step) runs as ONE jitted ``lax.scan`` per phase
+      (``models.common.gen_scan``), with the state donated between phases.
+      TT cores stay closure constants of the scanned body exactly as in
+      ``common.tt_scan`` — the device never waits on Python between tokens.
+
+``Engine``
+    Continuous batching on top of the fused driver: a slot-based cache
+    pool with per-slot lengths.  Requests with heterogeneous prompt/gen
+    lengths are admitted into finished slots between fused chunks, prefill
+    is chunked across those boundaries (a freshly admitted slot consumes
+    its prompt tokens while neighbours keep decoding), and finished slots
+    are harvested and refilled — the pool stays at high occupancy instead
+    of padded-batch lockstep.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from collections import deque
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import common as model_common
+
+DRIVERS = ("fused", "python")
+
+
+def _decode_fn(model):
+    return jax.jit(model.decode_step, donate_argnums=(1,))
+
+
+def _python_loop(decode, params, cache, prompts, gen):
+    """Legacy one-jitted-step-per-token loop (the ``--driver python``
+    oracle).  Prefills by stepping the decode cache through the prompt,
+    then greedy-decodes ``gen`` tokens; each token pays a dispatch plus the
+    argmax host sync."""
+    b, prompt_len = prompts.shape
+    t0 = time.time()
+    logits = None
+    for i in range(prompt_len):
+        logits, cache = decode(params, cache, jnp.asarray(prompts[:, i:i+1]))
+    jax.block_until_ready(logits)
+    prefill_t = time.time() - t0
+    prompt_logits = logits
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out_tokens = [np.asarray(tok)]
+    t0 = time.time()
+    for _ in range(gen - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    decode_t = time.time() - t0
+    return {
+        "prefill_t": prefill_t,
+        "decode_t": decode_t,
+        "gen": np.concatenate(out_tokens, axis=1),
+        "prompt_logits": prompt_logits,
+    }
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(2,))
+def _run_steps(decode_step, params, state, n_steps):
+    """``n_steps`` fused decode steps, state donated across chunk calls so
+    the cache pool is updated in place between Python-side admissions."""
+    return model_common.gen_scan(decode_step, params, state, n_steps)
+
+
+def _fused_generate(model, params, cache, prompts, gen):
+    """Whole-generation fused driver: two scanned phases (prefill, decode)
+    so the timing split matches the python loop's reporting boundaries."""
+    decode = model.decode_step            # raw step: scanned, not re-jitted
+    b, prompt_len = prompts.shape
+    t_max = int(prompt_len + gen)
+    tokens = np.zeros((b, t_max), np.int32)
+    tokens[:, :prompt_len] = prompts
+    state = model_common.gen_init(
+        cache, tokens, prompt_len, t_max, model.cfg.padded_vocab_size
+    )
+    t0 = time.time()
+    state = _run_steps(decode, params, state, prompt_len)
+    state = jax.block_until_ready(state)
+    prefill_t = time.time() - t0
+    t0 = time.time()
+    if gen > 1:
+        state = _run_steps(decode, params, state, gen - 1)
+        state = jax.block_until_ready(state)
+    decode_t = time.time() - t0
+    return {
+        "prefill_t": prefill_t,
+        "decode_t": decode_t,
+        "gen": np.asarray(state.tokens[:, prompt_len:]),
+        "prompt_logits": state.prompt_logits,
+    }
+
+
+def generate(model, params, prompts, gen: int, max_len: Optional[int] = None,
+             driver: str = "fused", decode=None) -> dict:
+    """One uniform-batch serving run; single source of truth for
+    prefill-by-stepping + greedy decode + timing boundaries.
+
+    Returns ``{prefill_t, decode_t, gen (B, gen) np.int32, prompt_logits}``
+    — identical contract (and, token for token, identical output) for both
+    drivers.  ``decode`` lets python-driver callers share one jitted step
+    across runs (the fused driver keys its compile cache on
+    ``model.decode_step`` itself and needs no sharing).
+    """
+    if driver not in DRIVERS:
+        raise ValueError(f"unknown driver {driver!r} (choose from {DRIVERS})")
+    prompts = np.asarray(prompts, np.int32)
+    if max_len is None:
+        max_len = prompts.shape[1] + gen
+    cache = model.init_cache(prompts.shape[0], max_len)
+    if driver == "python":
+        if decode is None:
+            decode = _decode_fn(model)
+        return _python_loop(decode, params, cache, prompts, gen)
+    return _fused_generate(model, params, cache, prompts, gen)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+class Request(NamedTuple):
+    uid: int
+    prompt: np.ndarray            # (plen,) int32
+    gen: int
+
+
+class Completion(NamedTuple):
+    uid: int
+    tokens: np.ndarray            # (gen,) int32 generated tokens
+    prompt_logits: np.ndarray     # (V,) fp32 logits after the prompt
+
+
+def _zero_slot(leaf, i):
+    """Zero one slot's rows of a cache leaf.  Convention (every family):
+    the only 1-D cache leaf is the per-slot ``pos``; everything else stacks
+    (L, B, ...) with the slot axis second."""
+    if leaf.ndim == 1:
+        return leaf.at[i].set(0)
+    return leaf.at[:, i].set(jnp.zeros_like(leaf[:, i]))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _admit_slot(state, i, token_row, prompt_len, total_len):
+    """Reset slot ``i`` for a new request — cache rows zeroed, prompt
+    written, per-slot lengths set — as ONE donated dispatch (a leaf-by-leaf
+    host-side reset costs a dispatch per cache leaf per admission, which
+    dominates small-model chunks)."""
+    return model_common.GenState(
+        cache=jax.tree.map(lambda leaf: _zero_slot(leaf, i), state.cache),
+        tokens=state.tokens.at[i].set(token_row),
+        prompt_len=state.prompt_len.at[i].set(prompt_len),
+        total_len=state.total_len.at[i].set(total_len),
+        active=state.active.at[i].set(True),
+        prompt_logits=state.prompt_logits.at[i].set(0.0),
+    )
+
+
+class Engine:
+    """Slot-based continuous-batching engine over the fused decode driver.
+
+    ``slots`` cache rows are stepped together in fused chunks of
+    ``chunk_steps`` tokens; between chunks (the only points Python touches
+    the loop) finished slots are harvested and queued requests admitted.
+    Each admission resets exactly one slot — cache rows zeroed, prompt
+    written, per-slot lengths set — so heterogeneous request streams keep
+    every slot busy instead of padding to the longest request.
+
+    Greedy decode is DETERMINISTIC in length: a request admitted with
+    prompt ``plen`` and budget ``gen`` retires after exactly
+    ``plen + gen - 1`` fused steps.  The engine therefore schedules
+    entirely with host-side arithmetic — no device→host readback at chunk
+    boundaries; the device is touched between chunks only to harvest a
+    finished slot's rows (once per request) and to admit its successor.
+
+    Limits: requests are token-only — admission zeroes the slot's whole
+    cache, so an encdec request's cross-attention memory (mem_k/mem_v via
+    ``precompute_memory_cache``) cannot yet ride a slot; running encode at
+    admission needs the request front-end (ROADMAP).  MoE serves, but
+    staggered == isolated is not promised there (expert capacity couples
+    batch rows; see ``mlp.moe_apply``).
+    """
+
+    def __init__(self, model, params, slots: int = 4, max_len: int = 128,
+                 chunk_steps: int = 8):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.chunk_steps = chunk_steps
+        self._step = model.decode_step        # raw step: scanned, not jitted
+        self.queue: deque = deque()
+        self._occupant: List[Optional[Request]] = [None] * slots
+        self._remaining = [0] * slots         # fused steps until retirement
+        self._uid = 0
+        self.steps = 0            # fused steps run (occupancy accounting)
+        self.slot_steps = 0       # steps × busy slots (useful work)
+        self.state = model_common.gen_init(
+            model.init_cache(slots, max_len),
+            np.zeros((slots, max_len), np.int32),
+            prompt_len=np.ones((slots,), np.int32),
+            total_len=np.ones((slots,), np.int32),
+            vocab=model.cfg.padded_vocab_size,
+            active=np.zeros((slots,), bool),
+        )
+
+    def submit(self, prompt, gen: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) < 1 or gen < 1:
+            raise ValueError(
+                f"request needs a non-empty prompt and gen >= 1, got "
+                f"plen={len(prompt)} gen={gen}"
+            )
+        if len(prompt) + gen > self.max_len:
+            raise ValueError(
+                f"request needs {len(prompt) + gen} positions, "
+                f"pool rows hold {self.max_len}"
+            )
+        uid = self._uid
+        self._uid += 1
+        self.queue.append(Request(uid, prompt, gen))
+        return uid
+
+    # -- harvest + admission (between fused chunks) -------------------------
+
+    def _harvest_slot(self, i: int) -> Completion:
+        """Read a retired slot's generated rows (the once-per-request
+        device read) and free it."""
+        req = self._occupant[i]
+        plen = len(req.prompt)
+        toks = np.asarray(self.state.tokens[i, plen:plen + req.gen])
+        plog = np.asarray(self.state.prompt_logits[i])
+        self._occupant[i] = None
+        return Completion(req.uid, toks, plog)
+
+    def _admit_one(self, i: int, req: Request) -> None:
+        plen = len(req.prompt)
+        row = np.zeros((self.max_len,), np.int32)
+        row[:plen] = req.prompt
+        self.state = _admit_slot(
+            self.state, jnp.int32(i), jnp.asarray(row),
+            jnp.int32(plen), jnp.int32(plen + req.gen),
+        )
+        self._occupant[i] = req
+        self._remaining[i] = plen + req.gen - 1
+
+    def _turnover(self) -> List[Completion]:
+        """Harvest every retired slot; refill from the queue."""
+        done = []
+        for i in range(self.slots):
+            if self._occupant[i] is not None and self._remaining[i] <= 0:
+                done.append(self._harvest_slot(i))
+            if self._occupant[i] is None and self.queue:
+                self._admit_one(i, self.queue.popleft())
+        return done
+
+    # -- main loop ----------------------------------------------------------
+
+    def step_chunk(self) -> List[Completion]:
+        """Harvest/admit → one fused chunk.  Returns completions.
+
+        The chunk is shortened when every busy slot retires sooner — the
+        tail of a drained workload never scans frozen lockstep steps.  At
+        most ``chunk_steps`` distinct scan lengths ever compile."""
+        done = self._turnover()
+        busy = [i for i in range(self.slots) if self._occupant[i] is not None]
+        if not busy:
+            return done
+        n = min(self.chunk_steps, max(self._remaining[i] for i in busy))
+        self.state = _run_steps(self._step, self.params, self.state, n)
+        self.steps += n
+        for i in busy:
+            self.slot_steps += min(self._remaining[i], n)
+            self._remaining[i] -= n
+        return done
+
+    def run(self) -> List[Completion]:
+        """Drain the queue; returns every completion (match by uid)."""
+        out: List[Completion] = []
+        while self.queue or any(r is not None for r in self._occupant):
+            out.extend(self.step_chunk())
+        return out
+
+

@@ -1,7 +1,14 @@
-"""Serving driver: batched prefill + decode loop with a KV/state cache.
+"""Serving driver: batched prefill + decode with a KV/state cache.
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch gemma3-1b --reduced --batch 4 --prompt-len 32 --gen 16
+
+Decode runs through ``launch/engine.py``: the default ``--driver fused``
+executes the whole generation (prefill-by-stepping → sample → append →
+step) as one jitted ``lax.scan`` per phase — no host→device dispatch
+round-trip per token; ``--driver python`` keeps the legacy
+one-jitted-step-per-token loop as the oracle.  Both main run and
+``--verify`` oracle go through the same driver.
 
 TT-native serving (``--weights tt``): the driver takes a TTCompressor
 payload (compressed in-process from spectrally-decayed init weights, or
@@ -17,13 +24,13 @@ for both modes.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch import engine as engine_mod
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_host_mesh
 from repro.models.registry import build
@@ -95,36 +102,6 @@ def _tt_setup(params, args, cfg):
     return params_tt, payload, line
 
 
-def _decode_loop(decode, params, cache, prompts, gen):
-    """Prefill by stepping the decode cache through the prompt (one compiled
-    artifact), then greedy-decode ``gen`` tokens.  Returns timing + logits
-    at the last prompt position (the verification comparison point)."""
-    b, prompt_len = prompts.shape
-    t0 = time.time()
-    logits = None
-    for i in range(prompt_len):
-        logits, cache = decode(params, cache, jnp.asarray(prompts[:, i:i+1]))
-    jax.block_until_ready(logits)
-    prefill_t = time.time() - t0
-    prompt_logits = logits
-
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-    out_tokens = [np.asarray(tok)]
-    t0 = time.time()
-    for _ in range(gen - 1):
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        out_tokens.append(np.asarray(tok))
-    jax.block_until_ready(logits)
-    decode_t = time.time() - t0
-    return {
-        "prefill_t": prefill_t,
-        "decode_t": decode_t,
-        "gen": np.concatenate(out_tokens, axis=1),
-        "prompt_logits": prompt_logits,
-    }
-
-
 def serve(args) -> dict:
     cfg = get_config(args.arch)
     if args.reduced:
@@ -143,13 +120,15 @@ def serve(args) -> dict:
         if args.weights == "tt":
             params, payload, byte_line = _tt_setup(params, args, cfg)
             print(f"[serve] TT-native mode: {byte_line}")
-        decode = jax.jit(model.decode_step, donate_argnums=(1,))
 
         prompts = rng.integers(
             0, cfg.vocab_size, size=(b, args.prompt_len), dtype=np.int32
         )
-        run = _decode_loop(
-            decode, params, model.init_cache(b, max_len), prompts, args.gen
+        # main run and verify oracle share ONE driver implementation
+        # (launch/engine.generate) — --driver picks fused vs python
+        run = engine_mod.generate(
+            model, params, prompts, args.gen, max_len=max_len,
+            driver=args.driver,
         )
 
         if args.weights == "tt" and args.verify:
@@ -160,9 +139,9 @@ def serve(args) -> dict:
             from repro.core import TTCompressor as _TTC
             from repro.models.common import logit_parity
             params_rx = _TTC().decompress(payload)
-            oracle = _decode_loop(
-                decode, params_rx, model.init_cache(b, max_len), prompts,
-                args.gen,
+            oracle = engine_mod.generate(
+                model, params_rx, prompts, args.gen, max_len=max_len,
+                driver=args.driver,
             )
             d, scale, agree = logit_parity(
                 run["prompt_logits"], oracle["prompt_logits"]
@@ -176,7 +155,8 @@ def serve(args) -> dict:
     gen = run["gen"]
     tps = b * (args.gen - 1) / max(run["decode_t"], 1e-9)
     mode = "tt-native" if args.weights == "tt" else "dense"
-    print(f"[serve] ({mode}) prefill {args.prompt_len} toks in "
+    print(f"[serve] ({mode}, driver={args.driver}) prefill "
+          f"{args.prompt_len} toks in "
           f"{run['prefill_t']*1e3:.0f}ms; decode {args.gen-1} steps @ "
           f"{tps:.1f} tok/s (batch={b})")
     print(f"[serve] sample generation: {gen[0][:16].tolist()}")
@@ -192,6 +172,10 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--driver", choices=engine_mod.DRIVERS, default="fused",
+                    help="decode driver: 'fused' runs the whole generation "
+                         "as one scanned computation per phase (no per-token "
+                         "dispatch); 'python' is the legacy per-token oracle")
     ap.add_argument("--weights", choices=("dense", "tt"), default="dense",
                     help="tt = serve straight from TT cores (no dense "
                          "weight materialization for eligible layers)")

@@ -241,7 +241,7 @@ def decode_attend(
     q: jax.Array,                # (B, 1, Hq, Dh)
     k_cache: jax.Array,          # (B, S_max, Hkv, Dh)
     v_cache: jax.Array,
-    pos: jax.Array,              # () current position (tokens < pos valid)
+    pos: jax.Array,              # () shared or (B,) per-slot position
     cfg,
     window: Optional[int] = None,
     is_global=False,
@@ -251,16 +251,21 @@ def decode_attend(
     Written as (max, sum-exp, weighted-V) reductions over the cache's
     sequence axis so GSPMD can keep the cache sequence-sharded on the model
     axis and merge with tiny collectives (flash-decoding semantics).
+
+    ``pos`` may be per-slot (B,) — the continuous-batching contract where
+    every batch row sits at its own sequence position — or a shared scalar;
+    the validity mask broadcasts over whichever it gets.
     """
     b, _, hq, dh = q.shape
     t = k_cache.shape[1]
     scale = dh ** -0.5
     k_pos = jnp.arange(t)
-    valid = k_pos[None, :] <= pos                        # (1, T) incl. self
+    posc = jnp.reshape(pos, (-1, 1))                     # (B,1) or (1,1)
+    valid = k_pos[None, :] <= posc                       # (B|1, T) incl. self
     if window is not None:
-        valid &= (k_pos[None, :] > pos - window) | jnp.asarray(is_global)
+        valid &= (k_pos[None, :] > posc - window) | jnp.asarray(is_global)
     scores = _gqa_scores(q, k_cache) * scale             # (B,Hkv,G,1,T)
-    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
     m = scores.max(axis=-1, keepdims=True)
     e = jnp.exp(scores - jax.lax.stop_gradient(m))
     num = _gqa_out(e, v_cache)                           # (B,1,Hq,Dh) fp32
@@ -270,11 +275,25 @@ def decode_attend(
 
 
 def cache_update(k_cache, v_cache, k_new, v_new, pos):
-    """Insert the new token's K/V at ``pos`` (dynamic index)."""
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, k_new.astype(k_cache.dtype), pos, axis=1
+    """Insert the new token's K/V at ``pos`` (dynamic index).
+
+    Scalar ``pos`` writes one shared position; per-slot ``pos`` (B,) writes
+    each batch row at its own position (vmapped dynamic-update — the slot
+    contract the continuous-batching engine steps under).  Both clamp at the
+    cache edge, so a frozen finished slot re-writes its last row instead of
+    overflowing."""
+    if jnp.ndim(pos) == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_new.astype(k_cache.dtype), pos, axis=1
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v_new.astype(v_cache.dtype), pos, axis=1
+        )
+        return k_cache, v_cache
+    upd = jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
     )
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, v_new.astype(v_cache.dtype), pos, axis=1
+    return (
+        upd(k_cache, k_new.astype(k_cache.dtype), pos),
+        upd(v_cache, v_new.astype(v_cache.dtype), pos),
     )
-    return k_cache, v_cache

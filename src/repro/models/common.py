@@ -227,6 +227,103 @@ def tt_scan(fn, init, layers, xs=(), length: Optional[int] = None):
     return jax.lax.scan(body, init, (layers, *xs))
 
 
+# ---------------------------------------------------------------------------
+# Fused decode driver: the whole generation loop as ONE lax.scan computation
+# ---------------------------------------------------------------------------
+
+class GenState(NamedTuple):
+    """Per-slot generation state the fused decode driver scans over.
+
+    The device never hands control back to Python between tokens: prompt
+    consumption, sampling, and append all happen inside the scan body, so a
+    whole generation (or a continuous-batching chunk) is one dispatch.
+
+    tokens      — (B, T_max) token buffer: prompt tokens up front, generated
+                  tokens appended in place at the slot's position;
+    prompt_len  — (B,) per-slot prompt length;
+    total_len   — (B,) per-slot prompt_len + gen budget;
+    active      — (B,) slots still consuming/producing (free slots idle with
+                  frozen cache.pos — their lockstep compute is discarded);
+    prompt_logits — (B, V) fp32 logits after each slot's last prompt token
+                  (the verification comparison point of the python loop).
+    """
+    cache: object
+    tokens: jax.Array
+    prompt_len: jax.Array
+    total_len: jax.Array
+    active: jax.Array
+    prompt_logits: jax.Array
+
+
+def gen_init(cache, tokens, prompt_len, total_len, vocab: int,
+             active=None) -> GenState:
+    """Pack a slot pool into a GenState (per-slot lengths may differ)."""
+    tokens = jnp.asarray(tokens, jnp.int32)
+    b = tokens.shape[0]
+    prompt_len = jnp.broadcast_to(
+        jnp.asarray(prompt_len, jnp.int32), (b,))
+    total_len = jnp.broadcast_to(jnp.asarray(total_len, jnp.int32), (b,))
+    if active is None:
+        active = jnp.ones((b,), bool)
+    return GenState(
+        cache=cache,
+        tokens=tokens,
+        prompt_len=prompt_len,
+        total_len=total_len,
+        active=jnp.broadcast_to(jnp.asarray(active, bool), (b,)),
+        prompt_logits=jnp.zeros((b, vocab), jnp.float32),
+    )
+
+
+def gen_step(decode_step, params, state: GenState) -> GenState:
+    """One fused decode step over every slot (runs inside lax.scan).
+
+    A slot at position p consumes tokens[p] — a prompt token while
+    p < prompt_len (prefill-by-stepping), its own previous sample after —
+    and greedy-samples the token for p+1.  Inactive slots are frozen: their
+    cache.pos is pinned so the batched decode_step re-writes the same cache
+    row with the same values (idempotent), and their buffers are left
+    untouched.  Every update is a masked select, so heterogeneous slots run
+    in lockstep without branching.
+    """
+    cache = state.cache
+    pos = cache.pos                                        # (B,) per-slot
+    t_max = state.tokens.shape[1]
+    cur = jnp.take_along_axis(
+        state.tokens, jnp.clip(pos, 0, t_max - 1)[:, None], axis=1
+    )                                                      # (B, 1)
+    logits, cache = decode_step(params, cache, cur)
+    adv = state.active
+    cache = cache._replace(pos=jnp.where(adv, cache.pos, pos))
+    newpos = cache.pos
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # greedy sample
+    widx = jnp.clip(newpos, 0, t_max - 1)
+    write = adv & (newpos >= state.prompt_len) & (newpos < state.total_len)
+    bidx = jnp.arange(state.tokens.shape[0])
+    old = state.tokens[bidx, widx]
+    tokens = state.tokens.at[bidx, widx].set(jnp.where(write, nxt, old))
+    at_prompt_end = adv & (pos == state.prompt_len - 1)
+    prompt_logits = jnp.where(
+        at_prompt_end[:, None], logits.astype(jnp.float32),
+        state.prompt_logits,
+    )
+    # the step that writes the slot's last token (index total_len-1) retires it
+    active = adv & (newpos <= state.total_len - 2)
+    return state._replace(
+        cache=cache, tokens=tokens, active=active,
+        prompt_logits=prompt_logits,
+    )
+
+
+def gen_scan(decode_step, params, state: GenState, n_steps: int) -> GenState:
+    """``n_steps`` fused decode steps as one scanned computation — the
+    while_loop-style driver body (fixed trip count, so it scans)."""
+    def body(s, _):
+        return gen_step(decode_step, params, s), None
+    state, _ = jax.lax.scan(body, state, None, length=n_steps)
+    return state
+
+
 def _path_str(path) -> str:
     parts = []
     for k in path:

@@ -158,7 +158,7 @@ class EncDecCache(NamedTuple):
     v: jax.Array
     mem_k: jax.Array              # (Ld, B, S_enc, Hkv, Dh) cross-attn (fixed)
     mem_v: jax.Array
-    pos: jax.Array
+    pos: jax.Array                # (B,) int32 per-slot (scalar also accepted)
 
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -169,7 +169,7 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return EncDecCache(
         k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
         mem_k=jnp.zeros(mshape, dtype), mem_v=jnp.zeros(mshape, dtype),
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -197,7 +197,7 @@ def decode_step(params: EncDecParams, cache: EncDecCache, tokens, cfg):
     x = params.embed[tokens].astype(common.cdtype(cfg))
     pos = cache.pos
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    positions = jnp.broadcast_to(jnp.reshape(pos, (-1, 1)), (b, 1))
 
     def body(h, lp, k_c, v_c, mk, mv):
         hn = common.rms_norm(h, lp.ln1, cfg.norm_eps)

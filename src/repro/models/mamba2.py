@@ -245,7 +245,7 @@ def loss_fn(params, batch, cfg, impl: str = "xla"):
 class MambaCache(NamedTuple):
     ssm_state: jax.Array          # (L, B, H, N, P) fp32
     conv_state: jax.Array         # (L, B, W-1, Di + 2N)
-    pos: jax.Array
+    pos: jax.Array                # (B,) int32 per-slot step counter
 
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -255,7 +255,7 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return MambaCache(
         ssm_state=jnp.zeros((l, batch, h, n, p), jnp.float32),
         conv_state=jnp.zeros((l, batch, w - 1, di + 2 * n), dtype),
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
     )
 
 

@@ -227,6 +227,14 @@ def moe_apply(
 
     Returns the combined expert outputs (B, S, D).  Aux-free (loss-side
     z-loss/load-balance handled by the trainer; see train/losses.py).
+
+    NOTE (serving): capacity COUPLES batch rows — a token's slot rank, and
+    hence whether it is dropped, depends on the other rows routed with it.
+    The fused decode driver is still token-for-token identical to the
+    python loop (same batch, same routing), but continuous batching cannot
+    promise staggered == isolated for MoE the way it does for every other
+    family: a slot's neighbours (including retired slots' frozen lockstep
+    tokens) legitimately shift expert capacity.
     """
     b, s, d = x.shape
     e = cfg.moe.num_experts

@@ -250,7 +250,7 @@ class GriffinCache(NamedTuple):
     # ring KV cache for attention layers (window-sized!)
     k: jax.Array                  # (n_triples, B, window, Hkv, Dh)
     v: jax.Array
-    pos: jax.Array
+    pos: jax.Array                # (B,) int32 per-slot (scalar also accepted)
 
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -267,7 +267,7 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
         convt=jnp.zeros((max(ntail, 1), batch, CONV_W - 1, r), dtype),
         k=jnp.zeros(kvshape, dtype),
         v=jnp.zeros(kvshape, dtype),
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -300,24 +300,39 @@ def _rglru_step(x, lp: RGLRULayerParams, cfg, h_state, conv_state):
 
 
 def _attn_step(x, lp: AttnLayerParams, cfg, k_c, v_c, pos):
-    """Ring-buffer windowed MQA decode step."""
+    """Ring-buffer windowed MQA decode step.
+
+    ``pos`` may be a shared scalar or per-slot (B,): each batch row keeps
+    its own ring write slot and validity horizon (continuous batching)."""
     win = k_c.shape[1]
     h = common.rms_norm(x, lp.ln1, cfg.norm_eps)
-    positions = jnp.broadcast_to(pos[None, None], (x.shape[0], 1))
+    positions = jnp.broadcast_to(
+        jnp.reshape(pos, (-1, 1)), (x.shape[0], 1)
+    )
     q, k_new, v_new = attn.qkv_project(h, lp.attn, cfg, positions)
     slot = jnp.mod(pos, win)
-    k_c = jax.lax.dynamic_update_slice_in_dim(
-        k_c, k_new.astype(k_c.dtype), slot, axis=1
-    )
-    v_c = jax.lax.dynamic_update_slice_in_dim(
-        v_c, v_new.astype(v_c.dtype), slot, axis=1
-    )
+    if jnp.ndim(pos) == 0:
+        k_c = jax.lax.dynamic_update_slice_in_dim(
+            k_c, k_new.astype(k_c.dtype), slot, axis=1
+        )
+        v_c = jax.lax.dynamic_update_slice_in_dim(
+            v_c, v_new.astype(v_c.dtype), slot, axis=1
+        )
+    else:
+        upd = jax.vmap(
+            lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(
+                c, n, s, axis=0
+            )
+        )
+        k_c = upd(k_c, k_new.astype(k_c.dtype), slot)
+        v_c = upd(v_c, v_new.astype(v_c.dtype), slot)
     # ring validity: slots hold positions (pos-win, pos]; all valid once full
     slots = jnp.arange(win)
-    age = jnp.mod(slot - slots, win)                       # 0 = newest
-    valid = age <= jnp.minimum(pos, win - 1)
+    slot2 = jnp.reshape(slot, (-1, 1))                     # (B|1, 1)
+    age = jnp.mod(slot2 - slots[None, :], win)             # 0 = newest
+    valid = age <= jnp.minimum(jnp.reshape(pos, (-1, 1)), win - 1)
     scores = attn._gqa_scores(q, k_c) * (q.shape[-1] ** -0.5)
-    scores = jnp.where(valid[None, None, None, None, :], scores, attn.NEG_INF)
+    scores = jnp.where(valid[:, None, None, None, :], scores, attn.NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     o = attn._gqa_out(p, v_c).astype(x.dtype)
     x = x + common.dense_apply(o, lp.attn.wo, in_ndim=2)

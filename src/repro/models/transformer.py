@@ -150,7 +150,7 @@ def loss_fn(
 class DecodeCache(NamedTuple):
     k: jax.Array                          # (L, B, S_max, Hkv, Dh)
     v: jax.Array
-    pos: jax.Array                        # () int32 — next write position
+    pos: jax.Array                        # (B,) int32 — per-slot next write
 
 
 def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -158,9 +158,12 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
         cfg.num_layers, batch, max_len, cfg.num_kv_heads,
         cfg.resolved_head_dim,
     )
+    # pos is PER-SLOT (B,): every batch row advances independently, the
+    # contract the continuous-batching engine admits/retires slots under.
+    # decode_step also accepts a scalar pos (legacy lockstep caches).
     return DecodeCache(
         k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -176,7 +179,7 @@ def decode_step(
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     b = x.shape[0]
     pos = cache.pos
-    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    positions = jnp.broadcast_to(jnp.reshape(pos, (-1, 1)), (b, 1))
     flags = _layer_flags(cfg)
 
     def step(h, lp, is_global, k_c, v_c):

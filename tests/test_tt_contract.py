@@ -172,3 +172,83 @@ def test_fits_vmem_counts_depth3_intermediate(rng, monkeypatch):
         kcommon, "VMEM_BUDGET", 4 * (acts_and_cores + 2 * interm)
     )
     assert ops._fits_vmem(x, cores, n_out, split=1)
+
+
+# ---------------------------------------------------------------------------
+# Tunable token-dim tile cap (env var / argument; adaptive default)
+# ---------------------------------------------------------------------------
+
+def test_resolve_tile_cap(monkeypatch):
+    from repro.kernels.tt_contract import kernel as kernel_mod
+    from repro.kernels.tt_contract import ops
+
+    default = kernel_mod.DEFAULT_TILE_CAP
+    monkeypatch.delenv("TT_CONTRACT_TILE", raising=False)
+    # adaptive default: grows when the token extent divides cleanly, but
+    # always keeps the historical cap as a VMEM-gate fallback so a bigger
+    # default can only ADD fused coverage
+    assert ops.resolve_tile_cap(2048) == (2048, 1024, default)
+    assert ops.resolve_tile_cap(3 * 1024) == (1024, default)
+    assert ops.resolve_tile_cap(384) == (default,)
+    assert ops.resolve_tile_cap(100) == (default,)
+    # explicit argument beats everything and is never second-guessed
+    assert ops.resolve_tile_cap(2048, tile=64) == (64,)
+    # env var beats the adaptive default
+    monkeypatch.setenv("TT_CONTRACT_TILE", "256")
+    assert ops.resolve_tile_cap(2048) == (256,)
+    assert ops.resolve_tile_cap(2048, tile=128) == (128,)
+
+
+def test_tile_cap_changes_grid_not_result(rng):
+    """Different tile caps pick different grids but identical outputs, and
+    _grid_1d honors the cap it is given."""
+    from repro.kernels.tt_contract import kernel as kernel_mod
+
+    assert kernel_mod._grid_1d(2048, 1024) == 1024
+    assert kernel_mod._grid_1d(1024, 256) == 256
+    assert kernel_mod._grid_1d(96, 512) == 96          # whole-batch block
+
+    cores = _mk_chain(rng, [32, 48], [4])
+    x = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    y_default = np.asarray(tt_contract(x, cores, 1))
+    y_small = np.asarray(tt_contract(x, cores, 1, tile=16))
+    y_large = np.asarray(tt_contract(x, cores, 1, tile=4096))
+    np.testing.assert_allclose(y_small, y_default, atol=1e-6)
+    np.testing.assert_allclose(y_large, y_default, atol=1e-6)
+
+
+def test_bigger_default_cap_never_evicts_fused(rng, monkeypatch):
+    """Regression: a shape whose big-tile footprint flunks the VMEM gate
+    must retry at the smaller fallback cap and stay fused, not fall back
+    to the unfused chain."""
+    from repro.kernels import common as kcommon
+    from repro.kernels.tt_contract import kernel as kernel_mod
+    from repro.kernels.tt_contract import ops
+
+    monkeypatch.delenv("TT_CONTRACT_TILE", raising=False)
+    cores = _mk_chain(rng, [64, 128], [4])
+    x = jnp.asarray(rng.standard_normal((2048, 64)), jnp.float32)
+    n_out = 128
+    # budget between the bb=1024 footprint and the bb=512 one
+    assert ops._fits_vmem(x, cores, n_out, 1, 512)
+    hi = 4 * (1024 * (64 + 128 + 4) + sum(int(g.size) for g in cores))
+    lo = 4 * (512 * (64 + 128 + 4) + sum(int(g.size) for g in cores))
+    monkeypatch.setattr(kcommon, "VMEM_BUDGET", (hi + lo))  # lo < B/2 < hi
+    assert not ops._fits_vmem(x, cores, n_out, 1, 2048)
+    assert not ops._fits_vmem(x, cores, n_out, 1, 1024)
+    assert ops._fits_vmem(x, cores, n_out, 1, 512)
+
+    used = {}
+    real = kernel_mod.tt_contract_2
+
+    def spy(x2, g0, g1, interpret=False, tile_cap=None):
+        used["tile_cap"] = tile_cap
+        return real(x2, g0, g1, interpret=interpret, tile_cap=tile_cap)
+
+    monkeypatch.setattr(kernel_mod, "tt_contract_2", spy)
+    y = np.asarray(ops.tt_contract(x, cores, 1))
+    assert used["tile_cap"] == 512            # retried down, stayed fused
+    w = np.asarray(tt_dense_ref(cores, 1))
+    np.testing.assert_allclose(
+        y, np.asarray(x) @ w, atol=1e-5 * max(np.abs(w).max(), 1.0)
+    )
