@@ -3,7 +3,8 @@
 Three serving strategies over the SAME decode_step, dense and TT-native:
 
   * ``python``     — one jitted decode_step per token, driven from Python
-                     (a dispatch round-trip + argmax host sync per token).
+                     (a dispatch round-trip + sample/argmax host sync per
+                     token).
   * ``fused``      — the whole generation as one scanned computation per
                      phase (``launch/engine.generate(driver="fused")``).
   * ``continuous`` — slot-based continuous batching over the fused driver
@@ -12,9 +13,12 @@ Three serving strategies over the SAME decode_step, dense and TT-native:
                      stepper, prompts/gens padded to the batch max).
 
 Asserts (the CI smoke lane gate):
-  * fused and python produce token-for-token identical generations;
+  * fused and python produce token-for-token identical generations —
+    greedy AND under temperature/top-k sampling (fixed seed);
   * fused decode tok/s >= python decode tok/s (dense AND tt weights);
-  * continuous batching beats padded lockstep on aggregate tok/s.
+  * continuous batching beats padded lockstep on aggregate tok/s;
+  * encdec requests under continuous batching (encoder memory computed at
+    admission) match isolated runs token-for-token.
 
 Results land in ``BENCH_decode.json`` (see benchmarks/record.py).
 """
@@ -74,6 +78,66 @@ def _driver_faceoff(model, cfg, params, b, plen, gen, label):
           f"{row['speedup']:>9.2f}x   parity={parity}")
     assert parity, f"{label}: fused generation diverged from python loop"
     return row
+
+
+def _sampled_faceoff(model, cfg, params, b, plen, gen, label,
+                     temperature=0.8, top_k=50, seed=7):
+    """Stochastic-sampling lane: both drivers under the same fixed seed
+    must emit identical tokens (the PRNG-carrying scan contract)."""
+    from repro.launch.engine import generate
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (b, plen), np.int32)
+    kw = dict(temperature=temperature, top_k=top_k, seed=seed)
+    py = generate(model, params, prompts, int(gen), driver="python", **kw)
+    fu = generate(model, params, prompts, int(gen), driver="fused", **kw)
+    fu2 = generate(model, params, prompts, int(gen), driver="fused", **kw)
+    parity = bool(np.array_equal(py["gen"], fu["gen"])
+                  and np.array_equal(fu["gen"], fu2["gen"]))
+    tps = b * (gen - 1) / max(min(fu["decode_t"], fu2["decode_t"]), 1e-9)
+    print(f"{label:<10}{'':>14}{tps:>12.1f}{'':>10}   parity={parity} "
+          f"(T={temperature}, top_k={top_k}, seed={seed})")
+    assert parity, f"{label}: sampled fused generation diverged from python"
+    return {"fused_tps": tps, "token_parity": parity,
+            "temperature": temperature, "top_k": top_k, "seed": seed}
+
+
+def _encdec_continuous(fast: bool, arch="seamless-m4t-large-v2"):
+    """Encdec under continuous batching: requests carry encoder input,
+    admission runs the encode, and every staggered completion must match
+    its isolated run token-for-token (the PR 4 hole this lane now gates)."""
+    from repro.configs import get_config
+    from repro.launch.engine import Engine, generate
+    from repro.models.registry import build
+
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    n_req = 4 if fast else 6
+    reqs = []
+    for _ in range(n_req):
+        plen = 2 + int(rng.integers(0, 3))
+        slen = 3 + int(rng.integers(0, cfg.frontend_len - 3))
+        reqs.append((
+            rng.integers(0, cfg.vocab_size, (plen,), np.int32),
+            4 + int(rng.integers(0, 3)),
+            rng.integers(0, cfg.vocab_size, (slen,), np.int32),
+        ))
+    eng = Engine(model, params, slots=2, max_len=16, chunk_steps=3)
+    uids = [eng.submit(p, g, src_tokens=s) for p, g, s in reqs]
+    done = {c.uid: c for c in eng.run()}
+    parity = True
+    for uid, (p, g, s) in zip(uids, reqs):
+        iso = generate(model, params, p[None], g, driver="fused",
+                       src_tokens=s[None])
+        parity &= bool(np.array_equal(done[uid].tokens, iso["gen"][0]))
+    occ = eng.slot_steps / max(eng.steps * eng.slots, 1)
+    print(f"\nencdec continuous batching ({n_req} requests w/ encoder "
+          f"input): staggered==isolated parity={parity}, "
+          f"occupancy {occ:.0%}")
+    assert parity, "encdec continuous batching diverged from isolated runs"
+    return {"requests": n_req, "token_parity": parity, "occupancy": occ}
 
 
 def _request_mix(cfg, n_small, n_big, rng):
@@ -170,6 +234,8 @@ def run(fast: bool = False, arch: str = "gemma3-1b"):
     params_tt = _tt_params(model, cfg)
     results["tt"] = _driver_faceoff(model, cfg, params_tt, b, plen, gen,
                                     "tt-native")
+    results["sampled"] = _sampled_faceoff(model, cfg, params, b, plen, gen,
+                                          "sampled")
 
     rng = np.random.default_rng(1)
     n_small, n_big = (7, 2) if fast else (9, 3)
@@ -178,10 +244,14 @@ def run(fast: bool = False, arch: str = "gemma3-1b"):
         model, cfg, params, reqs, slots=3 if fast else 4,
         chunk_steps=4,
     )
+    results["encdec_continuous"] = _encdec_continuous(fast)
 
     assert results["dense"]["speedup"] >= 1.0, results["dense"]
     assert results["tt"]["speedup"] >= 1.0, results["tt"]
     assert results["continuous"]["speedup"] > 1.0, results["continuous"]
+    assert results["sampled"]["token_parity"], results["sampled"]
+    assert results["encdec_continuous"]["token_parity"], (
+        results["encdec_continuous"])
     write_bench("decode", results)
     return results
 

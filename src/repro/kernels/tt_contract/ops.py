@@ -43,12 +43,29 @@ def resolve_tile_cap(b: int, tile: Optional[int] = None):
     ADD fused coverage: a shape whose big-tile footprint flunks the gate
     retries at the tile it would have used before."""
     if tile is not None:
-        return (int(tile),)
+        return (_validated_cap(tile, "tile="),)
     env = os.environ.get("TT_CONTRACT_TILE")
     if env:
-        return (int(env),)
+        return (_validated_cap(env, "the TT_CONTRACT_TILE env var"),)
     caps = [cap for cap in (2048, 1024) if b >= cap and b % cap == 0]
     return (*caps, _kernel.DEFAULT_TILE_CAP)
+
+
+def _validated_cap(value, source: str) -> int:
+    """An explicit tile cap must be a positive integer — reject junk with a
+    message naming where it came from (a bad TT_CONTRACT_TILE used to
+    surface as an opaque int() ValueError deep in the dispatch)."""
+    try:
+        cap = int(value)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"{source} must be a positive integer tile cap, got {value!r}"
+        ) from None
+    if cap <= 0:
+        raise ValueError(
+            f"{source} must be a positive integer tile cap, got {value!r}"
+        )
+    return cap
 
 
 def _fits_vmem(x2, cores, n_out: int, split: int,

@@ -9,12 +9,17 @@ Two layers, both family-agnostic (they only touch the uniform
 
     * ``python`` — the legacy oracle: one jitted ``decode_step`` per token,
       driven from Python.  Pays a host→device dispatch round-trip plus a
-      host sync (the argmax readback) per token.
+      host sync (the sample/argmax readback) per token.
     * ``fused``  — the whole generation (prefill-by-stepping → sample →
       append → step) runs as ONE jitted ``lax.scan`` per phase
       (``models.common.gen_scan``), with the state donated between phases.
       TT cores stay closure constants of the scanned body exactly as in
       ``common.tt_scan`` — the device never waits on Python between tokens.
+
+    Sampling (greedy, or temperature/top-k under per-row PRNG streams) and
+    encoder input for encdec families (``src_tokens`` → memory populated
+    before the first decode step) are part of the shared contract — the
+    two drivers stay token-for-token identical under both.
 
 ``Engine``
     Continuous batching on top of the fused driver: a slot-based cache
@@ -23,7 +28,9 @@ Two layers, both family-agnostic (they only touch the uniform
     is chunked across those boundaries (a freshly admitted slot consumes
     its prompt tokens while neighbours keep decoding), and finished slots
     are harvested and refilled — the pool stays at high occupancy instead
-    of padded-batch lockstep.
+    of padded-batch lockstep.  Encdec requests carry their source through
+    ``submit(..., src_tokens=...)``; admission runs the encode and fills
+    the slot's cross-attention memory rows.
 """
 
 from __future__ import annotations
@@ -46,11 +53,14 @@ def _decode_fn(model):
     return jax.jit(model.decode_step, donate_argnums=(1,))
 
 
-def _python_loop(decode, params, cache, prompts, gen):
+def _python_loop(decode, params, cache, prompts, gen,
+                 sampling=model_common.GREEDY, keys=None):
     """Legacy one-jitted-step-per-token loop (the ``--driver python``
     oracle).  Prefills by stepping the decode cache through the prompt,
-    then greedy-decodes ``gen`` tokens; each token pays a dispatch plus the
-    argmax host sync."""
+    then decodes ``gen`` tokens — greedy, or sampled under the SAME
+    per-row ``fold_in(keys[row], t)`` streams the fused driver uses, so
+    the oracle stays token-for-token even under stochastic sampling.  Each
+    token pays a dispatch plus the sample/argmax host sync."""
     b, prompt_len = prompts.shape
     t0 = time.time()
     logits = None
@@ -60,12 +70,19 @@ def _python_loop(decode, params, cache, prompts, gen):
     prefill_t = time.time() - t0
     prompt_logits = logits
 
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    def pick(logits, t):
+        if sampling.temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        keys_t = jax.vmap(jax.random.fold_in)(
+            keys, jnp.full((b,), t, jnp.int32))
+        return model_common.sample_tokens(logits, keys_t, sampling)[:, None]
+
+    tok = pick(logits, 0)
     out_tokens = [np.asarray(tok)]
     t0 = time.time()
-    for _ in range(gen - 1):
+    for t in range(1, gen):
         logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        tok = pick(logits, t)
         out_tokens.append(np.asarray(tok))
     jax.block_until_ready(logits)
     decode_t = time.time() - t0
@@ -77,14 +94,17 @@ def _python_loop(decode, params, cache, prompts, gen):
     }
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3), donate_argnums=(2,))
-def _run_steps(decode_step, params, state, n_steps):
+@functools.partial(jax.jit, static_argnums=(0, 3, 4), donate_argnums=(2,))
+def _run_steps(decode_step, params, state, n_steps,
+               sampling=model_common.GREEDY):
     """``n_steps`` fused decode steps, state donated across chunk calls so
     the cache pool is updated in place between Python-side admissions."""
-    return model_common.gen_scan(decode_step, params, state, n_steps)
+    return model_common.gen_scan(decode_step, params, state, n_steps,
+                                 sampling)
 
 
-def _fused_generate(model, params, cache, prompts, gen):
+def _fused_generate(model, params, cache, prompts, gen,
+                    sampling=model_common.GREEDY, keys=None):
     """Whole-generation fused driver: two scanned phases (prefill, decode)
     so the timing split matches the python loop's reporting boundaries."""
     decode = model.decode_step            # raw step: scanned, not re-jitted
@@ -93,15 +113,16 @@ def _fused_generate(model, params, cache, prompts, gen):
     tokens = np.zeros((b, t_max), np.int32)
     tokens[:, :prompt_len] = prompts
     state = model_common.gen_init(
-        cache, tokens, prompt_len, t_max, model.cfg.padded_vocab_size
+        cache, tokens, prompt_len, t_max, model.cfg.padded_vocab_size,
+        rng=keys,
     )
     t0 = time.time()
-    state = _run_steps(decode, params, state, prompt_len)
+    state = _run_steps(decode, params, state, prompt_len, sampling)
     state = jax.block_until_ready(state)
     prefill_t = time.time() - t0
     t0 = time.time()
     if gen > 1:
-        state = _run_steps(decode, params, state, gen - 1)
+        state = _run_steps(decode, params, state, gen - 1, sampling)
         state = jax.block_until_ready(state)
     decode_t = time.time() - t0
     return {
@@ -113,27 +134,59 @@ def _fused_generate(model, params, cache, prompts, gen):
 
 
 def generate(model, params, prompts, gen: int, max_len: Optional[int] = None,
-             driver: str = "fused", decode=None) -> dict:
+             driver: str = "fused", decode=None, src_tokens=None,
+             temperature: float = 0.0, top_k: Optional[int] = None,
+             seed: int = 0) -> dict:
     """One uniform-batch serving run; single source of truth for
-    prefill-by-stepping + greedy decode + timing boundaries.
+    prefill-by-stepping + sampling + timing boundaries.
 
     Returns ``{prefill_t, decode_t, gen (B, gen) np.int32, prompt_logits}``
     — identical contract (and, token for token, identical output) for both
     drivers.  ``decode`` lets python-driver callers share one jitted step
     across runs (the fused driver keys its compile cache on
     ``model.decode_step`` itself and needs no sharing).
+
+    ``src_tokens`` — optional encoder input for encoder-decoder families:
+    (S_src,) shared across the batch or (B, S_src) per row; encoded once up
+    front and written into the cache's cross-attention memory
+    (``model.populate_memory``) before any decode step runs.
+
+    ``temperature``/``top_k``/``seed`` — stochastic sampling.  Row ``r``
+    samples under ``fold_in(PRNGKey(seed), r)``; ``temperature=0`` (the
+    default) is greedy argmax, bit-identical to the pre-sampling driver.
     """
     if driver not in DRIVERS:
         raise ValueError(f"unknown driver {driver!r} (choose from {DRIVERS})")
     prompts = np.asarray(prompts, np.int32)
+    b = prompts.shape[0]
     if max_len is None:
         max_len = prompts.shape[1] + gen
-    cache = model.init_cache(prompts.shape[0], max_len)
+    cache = model.init_cache(b, max_len)
+    if src_tokens is not None:
+        if model.populate_memory is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} takes token-only input "
+                f"(no encoder memory); src_tokens is encdec-only"
+            )
+        src = np.asarray(src_tokens, np.int32)
+        if src.ndim == 1:
+            src = np.broadcast_to(src, (b, src.shape[0]))
+        cap = model.cfg.frontend_len
+        if src.shape[1] > cap:
+            raise ValueError(
+                f"src_tokens needs {src.shape[1]} encoder positions, the "
+                f"cache's memory rows hold {cap}"
+            )
+        cache = model.populate_memory(params, cache, jnp.asarray(src))
+    sampling = model_common.make_sampling(temperature, top_k)
+    keys = model_common.slot_keys(seed, b)
     if driver == "python":
         if decode is None:
             decode = _decode_fn(model)
-        return _python_loop(decode, params, cache, prompts, gen)
-    return _fused_generate(model, params, cache, prompts, gen)
+        return _python_loop(decode, params, cache, prompts, gen,
+                            sampling, keys)
+    return _fused_generate(model, params, cache, prompts, gen,
+                           sampling, keys)
 
 
 # ---------------------------------------------------------------------------
@@ -144,6 +197,8 @@ class Request(NamedTuple):
     uid: int
     prompt: np.ndarray            # (plen,) int32
     gen: int
+    src_tokens: Optional[np.ndarray] = None   # (slen,) int32 encoder input
+    key: Optional[np.ndarray] = None          # (2,) uint32 sampling base key
 
 
 class Completion(NamedTuple):
@@ -154,19 +209,25 @@ class Completion(NamedTuple):
 
 def _zero_slot(leaf, i):
     """Zero one slot's rows of a cache leaf.  Convention (every family):
-    the only 1-D cache leaf is the per-slot ``pos``; everything else stacks
-    (L, B, ...) with the slot axis second."""
+    the only 1-D cache leaves are the per-slot ``pos``/``mem_len``
+    counters; everything else stacks (L, B, ...) with the slot axis second.
+    Memory-awareness: zeroing an encdec slot leaves ``mem_len`` at 0 —
+    every cross-attention memory row masked — which decodes exactly as the
+    zeroed ``mem_k``/``mem_v`` rows would (zero output), so a token-only
+    request admitted after an encdec occupant can never see stale memory.
+    ``admit_memory`` then overwrites the memory rows + ``mem_len`` for
+    requests that DO carry encoder input."""
     if leaf.ndim == 1:
         return leaf.at[i].set(0)
     return leaf.at[:, i].set(jnp.zeros_like(leaf[:, i]))
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _admit_slot(state, i, token_row, prompt_len, total_len):
+def _admit_slot(state, i, token_row, prompt_len, total_len, key_row):
     """Reset slot ``i`` for a new request — cache rows zeroed, prompt
-    written, per-slot lengths set — as ONE donated dispatch (a leaf-by-leaf
-    host-side reset costs a dispatch per cache leaf per admission, which
-    dominates small-model chunks)."""
+    written, per-slot lengths + sampling key set — as ONE donated dispatch
+    (a leaf-by-leaf host-side reset costs a dispatch per cache leaf per
+    admission, which dominates small-model chunks)."""
     return model_common.GenState(
         cache=jax.tree.map(lambda leaf: _zero_slot(leaf, i), state.cache),
         tokens=state.tokens.at[i].set(token_row),
@@ -174,6 +235,29 @@ def _admit_slot(state, i, token_row, prompt_len, total_len):
         total_len=state.total_len.at[i].set(total_len),
         active=state.active.at[i].set(True),
         prompt_logits=state.prompt_logits.at[i].set(0.0),
+        rng=state.rng.at[i].set(key_row),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def _admit_slot_mem(admit_memory, state, params, i, token_row, prompt_len,
+                    total_len, key_row, src_row):
+    """Admission for a request carrying encoder input: the slot reset PLUS
+    one encode — ``admit_memory`` runs the model's encoder on ``src_row``
+    and writes the projected cross-attention K/V into that slot's
+    ``mem_k``/``mem_v`` rows (and its ``mem_len``) — all inside the same
+    donated dispatch.  Compiles once per distinct source length (the encode
+    is shape-specialized, like every other jitted entry point)."""
+    cache = jax.tree.map(lambda leaf: _zero_slot(leaf, i), state.cache)
+    cache = admit_memory(params, cache, i, src_row)
+    return model_common.GenState(
+        cache=cache,
+        tokens=state.tokens.at[i].set(token_row),
+        prompt_len=state.prompt_len.at[i].set(prompt_len),
+        total_len=state.total_len.at[i].set(total_len),
+        active=state.active.at[i].set(True),
+        prompt_logits=state.prompt_logits.at[i].set(0.0),
+        rng=state.rng.at[i].set(key_row),
     )
 
 
@@ -187,28 +271,41 @@ class Engine:
     written, per-slot lengths set — so heterogeneous request streams keep
     every slot busy instead of padding to the longest request.
 
-    Greedy decode is DETERMINISTIC in length: a request admitted with
-    prompt ``plen`` and budget ``gen`` retires after exactly
-    ``plen + gen - 1`` fused steps.  The engine therefore schedules
-    entirely with host-side arithmetic — no device→host readback at chunk
-    boundaries; the device is touched between chunks only to harvest a
-    finished slot's rows (once per request) and to admit its successor.
+    Decode is DETERMINISTIC in length: a request admitted with prompt
+    ``plen`` and budget ``gen`` retires after exactly ``plen + gen - 1``
+    fused steps (sampling changes WHICH tokens come out, never how many).
+    The engine therefore schedules entirely with host-side arithmetic — no
+    device→host readback at chunk boundaries; the device is touched between
+    chunks only to harvest a finished slot's rows (once per request) and to
+    admit its successor.
 
-    Limits: requests are token-only — admission zeroes the slot's whole
-    cache, so an encdec request's cross-attention memory (mem_k/mem_v via
-    ``precompute_memory_cache``) cannot yet ride a slot; running encode at
-    admission needs the request front-end (ROADMAP).  MoE serves, but
-    staggered == isolated is not promised there (expert capacity couples
-    batch rows; see ``mlp.moe_apply``).
+    Encoder-decoder requests ride slots like any other: ``submit`` takes
+    the request's source tokens, admission runs ONE jitted encode
+    (``_admit_slot_mem`` — the slot reset and the encode share a donated
+    dispatch) and writes the projected cross-attention K/V into that slot's
+    ``mem_k``/``mem_v`` rows; ``mem_len`` masks the unused tail rows.
+    Token-only admissions zero the memory rows and pin ``mem_len`` to 0, so
+    a recycled slot never leaks a previous occupant's memory.
+
+    Sampling: ``temperature``/``top_k`` apply engine-wide; each request
+    samples under its own base key (derived from ``seed`` — per-request
+    override via ``submit(..., seed=)``), advanced by slot-local progress
+    only, so staggered == isolated holds under stochastic sampling too.
+
+    Limits: MoE serves, but staggered == isolated is not promised there
+    (expert capacity couples batch rows; see ``mlp.moe_apply``).
     """
 
     def __init__(self, model, params, slots: int = 4, max_len: int = 128,
-                 chunk_steps: int = 8):
+                 chunk_steps: int = 8, temperature: float = 0.0,
+                 top_k: Optional[int] = None, seed: int = 0):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.chunk_steps = chunk_steps
+        self.sampling = model_common.make_sampling(temperature, top_k)
+        self.seed = seed
         self._step = model.decode_step        # raw step: scanned, not jitted
         self.queue: deque = deque()
         self._occupant: List[Optional[Request]] = [None] * slots
@@ -225,21 +322,61 @@ class Engine:
             active=np.zeros((slots,), bool),
         )
 
-    def submit(self, prompt, gen: int) -> int:
+    @property
+    def src_capacity(self) -> int:
+        """Encoder positions a slot's memory rows hold (0 = token-only
+        family)."""
+        if self.model.admit_memory is None:
+            return 0
+        return self.model.cfg.frontend_len
+
+    def submit(self, prompt, gen: int, src_tokens=None,
+               seed: Optional[int] = None) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) < 1 or gen < 1:
             raise ValueError(
                 f"request needs a non-empty prompt and gen >= 1, got "
                 f"plen={len(prompt)} gen={gen}"
             )
-        if len(prompt) + gen > self.max_len:
+        src = None
+        if src_tokens is not None:
+            if self.model.admit_memory is None:
+                raise ValueError(
+                    f"family {self.model.cfg.family!r} takes token-only "
+                    f"requests (no encoder input); src_tokens is "
+                    f"encdec-only"
+                )
+            src = np.asarray(src_tokens, np.int32).reshape(-1)
+            if len(src) < 1:
+                raise ValueError("src_tokens, when given, must be non-empty")
+        need_dec = len(prompt) + gen
+        need_enc = 0 if src is None else len(src)
+        if need_dec > self.max_len or need_enc > self.src_capacity:
             raise ValueError(
-                f"request needs {len(prompt) + gen} positions, "
-                f"pool rows hold {self.max_len}"
+                f"request needs {need_dec} decoder positions"
+                + (f" and {need_enc} encoder positions" if src is not None
+                   else "")
+                + f", pool rows hold {self.max_len} decoder"
+                + (f" and {self.src_capacity} encoder"
+                   if src is not None else "")
+                + " positions"
             )
         uid = self._uid
         self._uid += 1
-        self.queue.append(Request(uid, prompt, gen))
+        if seed is not None:
+            # row-0 key of the request's own seed — the same key an
+            # isolated ``generate(prompt[None], ..., seed=seed)`` run gives
+            # its one row, so sampled staggered-vs-isolated parity holds
+            # key-for-key
+            key = model_common.slot_keys(seed, 1)[0]
+        else:
+            # default: hash the uid into the engine's stream (fold_in, not
+            # seed+uid arithmetic — adjacent engine seeds or an explicit
+            # per-request seed must not collide with another request's
+            # default stream)
+            key = jax.random.fold_in(
+                model_common.slot_keys(self.seed, 1)[0], uid)
+        self.queue.append(Request(uid, prompt, gen, src, np.asarray(key)))
         return uid
 
     # -- harvest + admission (between fused chunks) -------------------------
@@ -258,10 +395,22 @@ class Engine:
         plen = len(req.prompt)
         row = np.zeros((self.max_len,), np.int32)
         row[:plen] = req.prompt
-        self.state = _admit_slot(
-            self.state, jnp.int32(i), jnp.asarray(row),
-            jnp.int32(plen), jnp.int32(plen + req.gen),
-        )
+        if req.src_tokens is None:
+            self.state = _admit_slot(
+                self.state, jnp.int32(i), jnp.asarray(row),
+                jnp.int32(plen), jnp.int32(plen + req.gen),
+                jnp.asarray(req.key),
+            )
+        else:
+            # encode-at-admission: the request's encoder memory is computed
+            # here (one jitted encode, donated like the plain reset) and
+            # written into THIS slot's mem rows — never zeroed away
+            self.state = _admit_slot_mem(
+                self.model.admit_memory, self.state, self.params,
+                jnp.int32(i), jnp.asarray(row),
+                jnp.int32(plen), jnp.int32(plen + req.gen),
+                jnp.asarray(req.key), jnp.asarray(req.src_tokens),
+            )
         self._occupant[i] = req
         self._remaining[i] = plen + req.gen - 1
 
@@ -288,7 +437,8 @@ class Engine:
         if not busy:
             return done
         n = min(self.chunk_steps, max(self._remaining[i] for i in busy))
-        self.state = _run_steps(self._step, self.params, self.state, n)
+        self.state = _run_steps(self._step, self.params, self.state, n,
+                                self.sampling)
         self.steps += n
         for i in busy:
             self.slot_steps += min(self._remaining[i], n)

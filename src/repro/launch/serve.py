@@ -124,11 +124,23 @@ def serve(args) -> dict:
         prompts = rng.integers(
             0, cfg.vocab_size, size=(b, args.prompt_len), dtype=np.int32
         )
+        # encdec archs carry encoder input: each request/row gets a source
+        # stream, encoded into the cross-attn memory before decode
+        src = None
+        if model.populate_memory is not None:
+            src = rng.integers(
+                0, cfg.vocab_size, size=(b, cfg.frontend_len),
+                dtype=np.int32,
+            )
+        sample_kw = dict(
+            src_tokens=src, temperature=args.temperature, top_k=args.top_k,
+            seed=args.seed,
+        )
         # main run and verify oracle share ONE driver implementation
         # (launch/engine.generate) — --driver picks fused vs python
         run = engine_mod.generate(
             model, params, prompts, args.gen, max_len=max_len,
-            driver=args.driver,
+            driver=args.driver, **sample_kw,
         )
 
         if args.weights == "tt" and args.verify:
@@ -141,7 +153,7 @@ def serve(args) -> dict:
             params_rx = _TTC().decompress(payload)
             oracle = engine_mod.generate(
                 model, params_rx, prompts, args.gen, max_len=max_len,
-                driver=args.driver,
+                driver=args.driver, **sample_kw,
             )
             d, scale, agree = logit_parity(
                 run["prompt_logits"], oracle["prompt_logits"]
@@ -170,7 +182,15 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="weights/prompts RNG seed AND the sampling seed "
+                         "(row r samples under fold_in(PRNGKey(seed), r))")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 (default) is greedy "
+                         "argmax, bit-identical to the pre-sampling driver")
+    ap.add_argument("--top-k", type=int, default=None,
+                    help="keep only the k highest logits before sampling "
+                         "(requires --temperature > 0 to matter)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--driver", choices=engine_mod.DRIVERS, default="fused",
                     help="decode driver: 'fused' runs the whole generation "

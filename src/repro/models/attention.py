@@ -223,10 +223,24 @@ def _attend_block(qblk, k, v, q_pos, cfg, window, is_global, scale, k_off=0):
     ).astype(qblk.dtype)
 
 
-def cross_attend(q, k, v, cfg) -> jax.Array:
-    """Full (unmasked) cross attention for the encoder-decoder arch."""
+def cross_attend(q, k, v, cfg, mem_len=None) -> jax.Array:
+    """Full cross attention for the encoder-decoder arch.
+
+    ``mem_len`` — optional () or (B,) count of valid memory rows per batch
+    row; rows at or past it are masked out (the continuous-batching slot
+    contract: a slot's encoder memory occupies a prefix of the fixed-size
+    ``mem_k``/``mem_v`` rows, and padding rows must never attract weight).
+    ``mem_len == 0`` degrades gracefully: the finite NEG_INF mask leaves a
+    uniform softmax over all-zero V rows, i.e. exactly the zero output a
+    token-only slot decoded against before masking existed.  ``None`` keeps
+    the legacy fully-unmasked behaviour bit-for-bit (no ``where`` traced).
+    """
     scale = q.shape[-1] ** -0.5
     scores = _gqa_scores(q, k) * scale
+    if mem_len is not None:
+        t = k.shape[1]
+        valid = jnp.arange(t)[None, :] < jnp.reshape(mem_len, (-1, 1))
+        scores = jnp.where(valid[:, None, None, None], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     return _gqa_out(
         p, v, bf16_probs=getattr(cfg, "opt_bf16_probs", False)

@@ -231,6 +231,70 @@ def tt_scan(fn, init, layers, xs=(), length: Optional[int] = None):
 # Fused decode driver: the whole generation loop as ONE lax.scan computation
 # ---------------------------------------------------------------------------
 
+class Sampling(NamedTuple):
+    """Static sampling configuration for the decode drivers.
+
+    temperature — 0.0 selects greedy argmax (bit-identical to the pre-
+                  sampling driver: no PRNG math is even traced); > 0 scales
+                  logits by 1/temperature before categorical sampling.
+    top_k       — keep only the k highest logits before sampling (ties at
+                  the k-th value are all kept); None disables the filter.
+
+    The tuple is hashable, so it rides the jitted drivers as a static
+    argument — each distinct (temperature, top_k) compiles once.
+    """
+    temperature: float = 0.0
+    top_k: Optional[int] = None
+
+
+GREEDY = Sampling()
+
+
+def make_sampling(temperature: float, top_k: Optional[int]) -> Sampling:
+    """Validated Sampling for the serving front doors: a negative
+    temperature would silently sample an INVERTED distribution (it passes
+    the == 0 greedy check), and top_k <= 0 only surfaces as an opaque
+    broadcast error deep inside the jitted scan — reject both up front."""
+    temperature = float(temperature)
+    if temperature < 0.0:
+        raise ValueError(
+            f"temperature must be >= 0 (0 = greedy), got {temperature}"
+        )
+    if top_k is not None:
+        top_k = int(top_k)
+        if top_k < 1:
+            raise ValueError(f"top_k must be >= 1 (or None), got {top_k}")
+    return Sampling(temperature, top_k)
+
+
+def slot_keys(seed: int, b: int) -> jax.Array:
+    """Per-row sampling base keys for a ``b``-row generation: row ``r``
+    gets ``fold_in(PRNGKey(seed), r)``.  The continuous-batching engine
+    gives each request the row-0 key of its own seed, so a request samples
+    the same stream whether it runs isolated (batch row 0) or staggered in
+    an arbitrary slot."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda r: jax.random.fold_in(base, r))(jnp.arange(b))
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array,
+                  sampling: Sampling) -> jax.Array:
+    """Temperature/top-k sample one token per row (greedy is the caller's
+    branch — this function requires temperature > 0).
+
+    logits (B, V) are scaled by 1/temperature in fp32, optionally top-k
+    masked, then sampled with ``jax.random.categorical`` under each row's
+    own key — the per-row keys are what keep staggered slots independent.
+    """
+    assert sampling.temperature > 0.0, "greedy path must not sample"
+    scaled = logits.astype(jnp.float32) / sampling.temperature
+    if sampling.top_k is not None and sampling.top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(scaled, sampling.top_k)[0][..., -1:]
+        scaled = jnp.where(scaled >= kth, scaled,
+                           jnp.asarray(-1e30, jnp.float32))
+    return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+
+
 class GenState(NamedTuple):
     """Per-slot generation state the fused decode driver scans over.
 
@@ -245,7 +309,12 @@ class GenState(NamedTuple):
     active      — (B,) slots still consuming/producing (free slots idle with
                   frozen cache.pos — their lockstep compute is discarded);
     prompt_logits — (B, V) fp32 logits after each slot's last prompt token
-                  (the verification comparison point of the python loop).
+                  (the verification comparison point of the python loop);
+    rng         — (B, 2) uint32 per-slot sampling base keys.  The scan never
+                  mutates them: the key for a slot's t-th generated token is
+                  ``fold_in(rng[slot], t)``, a function of slot-local
+                  progress only — so a request samples identically isolated
+                  or staggered, whatever slot or step it lands on.
     """
     cache: object
     tokens: jax.Array
@@ -253,10 +322,11 @@ class GenState(NamedTuple):
     total_len: jax.Array
     active: jax.Array
     prompt_logits: jax.Array
+    rng: jax.Array
 
 
 def gen_init(cache, tokens, prompt_len, total_len, vocab: int,
-             active=None) -> GenState:
+             active=None, rng=None) -> GenState:
     """Pack a slot pool into a GenState (per-slot lengths may differ)."""
     tokens = jnp.asarray(tokens, jnp.int32)
     b = tokens.shape[0]
@@ -265,6 +335,8 @@ def gen_init(cache, tokens, prompt_len, total_len, vocab: int,
     total_len = jnp.broadcast_to(jnp.asarray(total_len, jnp.int32), (b,))
     if active is None:
         active = jnp.ones((b,), bool)
+    if rng is None:
+        rng = jnp.zeros((b, 2), jnp.uint32)
     return GenState(
         cache=cache,
         tokens=tokens,
@@ -272,15 +344,18 @@ def gen_init(cache, tokens, prompt_len, total_len, vocab: int,
         total_len=total_len,
         active=jnp.broadcast_to(jnp.asarray(active, bool), (b,)),
         prompt_logits=jnp.zeros((b, vocab), jnp.float32),
+        rng=jnp.asarray(rng, jnp.uint32),
     )
 
 
-def gen_step(decode_step, params, state: GenState) -> GenState:
+def gen_step(decode_step, params, state: GenState,
+             sampling: Sampling = GREEDY) -> GenState:
     """One fused decode step over every slot (runs inside lax.scan).
 
     A slot at position p consumes tokens[p] — a prompt token while
     p < prompt_len (prefill-by-stepping), its own previous sample after —
-    and greedy-samples the token for p+1.  Inactive slots are frozen: their
+    and samples the token for p+1 (greedy argmax, or temperature/top-k
+    under the slot's own PRNG stream).  Inactive slots are frozen: their
     cache.pos is pinned so the batched decode_step re-writes the same cache
     row with the same values (idempotent), and their buffers are left
     untouched.  Every update is a masked select, so heterogeneous slots run
@@ -296,7 +371,14 @@ def gen_step(decode_step, params, state: GenState) -> GenState:
     adv = state.active
     cache = cache._replace(pos=jnp.where(adv, cache.pos, pos))
     newpos = cache.pos
-    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # greedy sample
+    if sampling.temperature == 0.0:
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy sample
+    else:
+        # key = fold_in(slot base key, # tokens this slot has generated) —
+        # slot-local progress, so staggered == isolated holds under sampling
+        gen_idx = jnp.maximum(newpos - state.prompt_len, 0)
+        keys = jax.vmap(jax.random.fold_in)(state.rng, gen_idx)
+        nxt = sample_tokens(logits, keys, sampling)
     widx = jnp.clip(newpos, 0, t_max - 1)
     write = adv & (newpos >= state.prompt_len) & (newpos < state.total_len)
     bidx = jnp.arange(state.tokens.shape[0])
@@ -315,11 +397,12 @@ def gen_step(decode_step, params, state: GenState) -> GenState:
     )
 
 
-def gen_scan(decode_step, params, state: GenState, n_steps: int) -> GenState:
+def gen_scan(decode_step, params, state: GenState, n_steps: int,
+             sampling: Sampling = GREEDY) -> GenState:
     """``n_steps`` fused decode steps as one scanned computation — the
     while_loop-style driver body (fixed trip count, so it scans)."""
     def body(s, _):
-        return gen_step(decode_step, params, s), None
+        return gen_step(decode_step, params, s, sampling), None
     state, _ = jax.lax.scan(body, state, None, length=n_steps)
     return state
 

@@ -158,6 +158,7 @@ class EncDecCache(NamedTuple):
     v: jax.Array
     mem_k: jax.Array              # (Ld, B, S_enc, Hkv, Dh) cross-attn (fixed)
     mem_v: jax.Array
+    mem_len: jax.Array            # (B,) int32 valid memory rows per slot
     pos: jax.Array                # (B,) int32 per-slot (scalar also accepted)
 
 
@@ -169,13 +170,16 @@ def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return EncDecCache(
         k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
         mem_k=jnp.zeros(mshape, dtype), mem_v=jnp.zeros(mshape, dtype),
+        # all rows valid by default: zero memory under a full mask attends
+        # uniformly over zero V rows — exactly zero, the legacy behaviour
+        mem_len=jnp.full((batch,), cfg.frontend_len, jnp.int32),
         pos=jnp.zeros((batch,), jnp.int32),
     )
 
 
-def precompute_memory_cache(params: EncDecParams, memory, cfg,
-                            cache: EncDecCache) -> EncDecCache:
-    """Project the encoder memory into per-layer cross-attn K/V once."""
+def project_memory_kv(params: EncDecParams, memory, cfg):
+    """Per-layer cross-attn K/V of an encoder memory: (Ld, B, S, Hkv, Dh)
+    pair — the one projection every memory-population path shares."""
     def proj(lp: DecLayerParams):
         km = common.dense_apply(memory, lp.cross_attn.wk)
         vm = common.dense_apply(memory, lp.cross_attn.wv)
@@ -183,14 +187,67 @@ def precompute_memory_cache(params: EncDecParams, memory, cfg,
     if common.layers_have_tt(params.dec_layers):
         # TTLinear leaves can't ride a vmap over the stacked tree (cores
         # carry no layer axis) — map the layer index and gather instead
-        km, vm = jax.lax.map(
+        return jax.lax.map(
             lambda i: proj(common.layer_at(params.dec_layers, i)),
             jnp.arange(cfg.num_layers),
         )
-    else:
-        km, vm = jax.vmap(proj)(params.dec_layers)
-    return cache._replace(mem_k=km.astype(cache.mem_k.dtype),
-                          mem_v=vm.astype(cache.mem_v.dtype))
+    return jax.vmap(proj)(params.dec_layers)
+
+
+def precompute_memory_cache(params: EncDecParams, memory, cfg,
+                            cache: EncDecCache) -> EncDecCache:
+    """Project the encoder memory into per-layer cross-attn K/V once."""
+    km, vm = project_memory_kv(params, memory, cfg)
+    return cache._replace(
+        mem_k=km.astype(cache.mem_k.dtype),
+        mem_v=vm.astype(cache.mem_v.dtype),
+        mem_len=jnp.full((memory.shape[0],), memory.shape[1], jnp.int32),
+    )
+
+
+def encode_memory(params: EncDecParams, src_tokens, cfg):
+    """Source tokens → per-layer cross-attn memory K/V.
+
+    The multimodal frontend is a STUB (see module docstring): source tokens
+    embed through the tied decoder table to stand in for frame embeddings,
+    then run the bidirectional encoder.  Returns the (Ld, B, S_src, Hkv,
+    Dh) K/V pair ready to drop into ``EncDecCache.mem_k``/``mem_v`` rows.
+    """
+    frames = params.embed[src_tokens].astype(common.cdtype(cfg))
+    memory = encode(params, frames, cfg)
+    return project_memory_kv(params, memory, cfg)
+
+
+def populate_memory(params: EncDecParams, cache: EncDecCache, src_tokens,
+                    cfg) -> EncDecCache:
+    """Whole-batch memory population (isolated ``generate()`` front door):
+    every row encodes its own source; rows past ``S_src`` stay zero and are
+    masked out by ``mem_len``."""
+    km, vm = encode_memory(params, src_tokens, cfg)
+    s = km.shape[2]
+    return cache._replace(
+        mem_k=cache.mem_k.at[:, :, :s].set(km.astype(cache.mem_k.dtype)),
+        mem_v=cache.mem_v.at[:, :, :s].set(vm.astype(cache.mem_v.dtype)),
+        mem_len=jnp.full((src_tokens.shape[0],), s, jnp.int32),
+    )
+
+
+def admit_memory(params: EncDecParams, cache: EncDecCache, slot, src_tokens,
+                 cfg) -> EncDecCache:
+    """One slot's encoder memory at admission: encode the request's source
+    (batch of one), project cross-attn K/V, and write ONLY that slot's
+    ``mem_k``/``mem_v`` rows + ``mem_len`` — the slot-granular counterpart
+    of ``populate_memory`` that lets the continuous-batching engine run
+    encode per request instead of zeroing the memory away."""
+    km, vm = encode_memory(params, src_tokens[None, :], cfg)
+    s = km.shape[2]
+    return cache._replace(
+        mem_k=cache.mem_k.at[:, slot, :s].set(
+            km[:, 0].astype(cache.mem_k.dtype)),
+        mem_v=cache.mem_v.at[:, slot, :s].set(
+            vm[:, 0].astype(cache.mem_v.dtype)),
+        mem_len=cache.mem_len.at[slot].set(s),
+    )
 
 
 def decode_step(params: EncDecParams, cache: EncDecCache, tokens, cfg):
@@ -207,7 +264,7 @@ def decode_step(params: EncDecParams, cache: EncDecCache, tokens, cfg):
         h = h + common.dense_apply(o, lp.self_attn.wo, in_ndim=2)
         hn = common.rms_norm(h, lp.ln_x, cfg.norm_eps)
         q = common.dense_apply(hn, lp.cross_attn.wq)
-        o = attn.cross_attend(q, mk, mv, cfg)
+        o = attn.cross_attend(q, mk, mv, cfg, mem_len=cache.mem_len)
         h = h + common.dense_apply(o, lp.cross_attn.wo, in_ndim=2)
         hn = common.rms_norm(h, lp.ln2, cfg.norm_eps)
         h = (h + mlp_mod.mlp_apply(hn, lp.mlp, cfg.act)).astype(h.dtype)

@@ -37,6 +37,12 @@ class Model:
     train_batch_spec: Callable
     prefill_batch_spec: Callable
     decode_batch_spec: Callable
+    # encoder-memory hooks (encdec only; None elsewhere — the serving layer
+    # keys "does this family take encoder input" off their presence):
+    #   populate_memory(params, cache, src_tokens) -> cache   [whole batch]
+    #   admit_memory(params, cache, slot, src_row) -> cache   [one slot]
+    populate_memory: Optional[Callable] = None
+    admit_memory: Optional[Callable] = None
 
 
 def _tok_spec(b, s):
@@ -170,6 +176,10 @@ def _build_encdec(cfg: ModelConfig) -> Model:
         train_batch_spec=train_spec,
         prefill_batch_spec=prefill_spec,
         decode_batch_spec=decode_spec,
+        populate_memory=lambda p, c, s: encdec_mod.populate_memory(
+            p, c, s, cfg),
+        admit_memory=lambda p, c, i, s: encdec_mod.admit_memory(
+            p, c, i, s, cfg),
     )
 
 

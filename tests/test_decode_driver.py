@@ -11,9 +11,12 @@ Three layers of guarantees:
   * continuous batching is exact, not approximate: staggered requests with
     unequal prompt/gen lengths produce the same tokens as isolated runs
     (slot admission resets state completely; validity masks keep cache
-    rows independent).  MoE is excluded from the staggered case only —
-    expert-capacity routing couples batch rows by design — but holds
-    fused-vs-python parity like every other family.
+    rows independent).  Encdec requests carry encoder input: admission
+    runs the encode and fills the slot's cross-attention memory rows, and
+    a recycled slot never leaks a previous occupant's memory.  MoE is
+    excluded from the staggered case only — expert-capacity routing
+    couples batch rows by design — but holds fused-vs-python parity like
+    every other family.
 """
 
 import jax
@@ -99,19 +102,31 @@ def test_scalar_pos_cache_still_decodes():
     assert cache_slot.pos.shape == (b,) and cache_scal.pos.shape == ()
 
 
-def _staggered_vs_isolated(arch, slots, reqs_spec, chunk_steps=3):
+def _staggered_vs_isolated(arch, slots, reqs_spec, chunk_steps=3,
+                           temperature=0.0, top_k=None):
     cfg, model, params = _model_and_params(arch)
     rng = np.random.default_rng(2)
     eng = Engine(model, params, slots=slots, max_len=24,
-                 chunk_steps=chunk_steps)
+                 chunk_steps=chunk_steps, temperature=temperature,
+                 top_k=top_k)
+    with_src = model.admit_memory is not None
     reqs = []
-    for plen, gen in reqs_spec:
+    for seed, (plen, gen) in enumerate(reqs_spec):
         p = rng.integers(0, cfg.vocab_size, (plen,), np.int32)
-        reqs.append((eng.submit(p, gen), p, gen))
+        src = None
+        if with_src:       # encdec: every request carries its own source
+            slen = 3 + int(rng.integers(0, cfg.frontend_len - 3))
+            src = rng.integers(0, cfg.vocab_size, (slen,), np.int32)
+        reqs.append((eng.submit(p, gen, src_tokens=src, seed=seed),
+                     p, gen, src, seed))
     done = {c.uid: c for c in eng.run()}
-    assert sorted(done) == sorted(uid for uid, _, _ in reqs)
-    for uid, p, gen in reqs:
-        iso = generate(model, params, p[None, :], gen, driver="fused")
+    assert sorted(done) == sorted(uid for uid, *_ in reqs)
+    for uid, p, gen, src, seed in reqs:
+        iso = generate(
+            model, params, p[None, :], gen, driver="fused",
+            src_tokens=None if src is None else src[None, :],
+            temperature=temperature, top_k=top_k, seed=seed,
+        )
         np.testing.assert_array_equal(
             done[uid].tokens, iso["gen"][0],
             err_msg=f"{arch} uid={uid} plen={len(p)} gen={gen}",
@@ -128,6 +143,14 @@ def test_continuous_matches_isolated_transformer():
     _staggered_vs_isolated("qwen1.5-0.5b", slots=2, reqs_spec=REQS)
 
 
+def test_continuous_matches_isolated_sampled():
+    """The staggered == isolated guarantee survives stochastic sampling:
+    per-request base keys advance with slot-LOCAL progress only, so a
+    request's sample stream is independent of its slot and neighbours."""
+    _staggered_vs_isolated("qwen1.5-0.5b", slots=2, reqs_spec=REQS[:4],
+                           temperature=0.9, top_k=64)
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize(
     "arch", ["gemma3-1b", "seamless-m4t-large-v2", "mamba2-1.3b",
@@ -135,10 +158,61 @@ def test_continuous_matches_isolated_transformer():
 )
 def test_continuous_matches_isolated_families(arch):
     """Slot admission fully resets recurrent/conv/KV state per family
-    (stale neighbours never leak into a readmitted slot).  encdec runs
-    token-only here — both sides decode against zero cross-attn memory;
-    per-request encode-at-admission is a ROADMAP item."""
+    (stale neighbours never leak into a readmitted slot).  encdec requests
+    carry per-request encoder input — admission runs the encode and the
+    staggered slot must still match the isolated run token-for-token."""
     _staggered_vs_isolated(arch, slots=2, reqs_spec=REQS[:4])
+
+
+def _encdec_setup(max_len=16, slots=1, chunk_steps=3):
+    cfg, model, params = _model_and_params("seamless-m4t-large-v2")
+    eng = Engine(model, params, slots=slots, max_len=max_len,
+                 chunk_steps=chunk_steps)
+    return cfg, model, params, eng
+
+
+def test_encdec_engine_memory_at_admission():
+    """The PR 4 hole, closed: an encdec request's cross-attention memory is
+    computed at admission and lives in its slot — the engine's tokens match
+    the isolated memory-conditioned run exactly, and differ from the
+    zero-memory decode the old engine produced."""
+    cfg, model, params, eng = _encdec_setup(slots=2)
+    rng = np.random.default_rng(5)
+    p = rng.integers(0, cfg.vocab_size, (3,), np.int32)
+    src = rng.integers(0, cfg.vocab_size, (6,), np.int32)
+    uid = eng.submit(p, 5, src_tokens=src)
+    done = {c.uid: c for c in eng.run()}
+    iso = generate(model, params, p[None], 5, driver="fused",
+                   src_tokens=src[None])
+    np.testing.assert_array_equal(done[uid].tokens, iso["gen"][0])
+    iso_zero = generate(model, params, p[None], 5, driver="fused")
+    assert not np.array_equal(iso["gen"][0], iso_zero["gen"][0]), (
+        "encoder memory had no effect on the decode — the admission "
+        "encode is not reaching cross-attention"
+    )
+
+
+def test_recycled_slot_no_stale_memory():
+    """Satellite: a slot reused after an encdec-with-memory occupant must
+    not leak stale mem_k/mem_v into a token-only request — asserted at the
+    LOGIT level, not just tokens (greedy argmax can mask small leaks)."""
+    cfg, model, params, eng = _encdec_setup(slots=1)
+    rng = np.random.default_rng(6)
+    src = rng.integers(0, cfg.vocab_size, (7,), np.int32)
+    p1 = rng.integers(0, cfg.vocab_size, (4,), np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, (3,), np.int32)
+    u1 = eng.submit(p1, 4, src_tokens=src)   # occupies THE slot first
+    u2 = eng.submit(p2, 4)                   # token-only, recycles the slot
+    done = {c.uid: c for c in eng.run()}
+    iso = generate(model, params, p2[None], 4, driver="fused")
+    np.testing.assert_array_equal(done[u2].tokens, iso["gen"][0])
+    a = np.asarray(done[u2].prompt_logits, np.float32)
+    b = np.asarray(iso["prompt_logits"][0], np.float32)
+    scale = max(np.abs(b).max(), 1e-6)
+    assert np.abs(a - b).max() <= 1e-3 * scale + 1e-5, (
+        "stale cross-attention memory leaked into the recycled slot"
+    )
+    assert u1 in done
 
 
 def test_engine_rejects_oversized_request():
@@ -146,6 +220,29 @@ def test_engine_rejects_oversized_request():
     eng = Engine(model, params, slots=2, max_len=8)
     with pytest.raises(ValueError):
         eng.submit(np.zeros((6,), np.int32), 4)
+
+
+def test_engine_capacity_error_covers_encoder_positions():
+    """Satellite: the capacity error must report the encoder-side limit
+    too, not just max_len, when the request carries encoder input."""
+    cfg, model, params, eng = _encdec_setup(max_len=16)
+    ok_prompt = np.zeros((3,), np.int32)
+    too_long_src = np.zeros((cfg.frontend_len + 1,), np.int32)
+    with pytest.raises(ValueError) as ei:
+        eng.submit(ok_prompt, 4, src_tokens=too_long_src)
+    msg = str(ei.value)
+    assert "encoder" in msg and str(cfg.frontend_len) in msg
+    # the decoder-side overflow message still names the pool bound
+    with pytest.raises(ValueError, match="decoder"):
+        eng.submit(np.zeros((20,), np.int32), 4)
+
+
+def test_engine_rejects_src_on_token_only_family():
+    cfg, model, params = _model_and_params("qwen1.5-0.5b")
+    eng = Engine(model, params, slots=2, max_len=16)
+    with pytest.raises(ValueError, match="token-only"):
+        eng.submit(np.zeros((3,), np.int32), 4,
+                   src_tokens=np.zeros((4,), np.int32))
 
 
 def test_engine_more_requests_than_slots():

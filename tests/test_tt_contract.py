@@ -199,6 +199,26 @@ def test_resolve_tile_cap(monkeypatch):
     assert ops.resolve_tile_cap(2048, tile=128) == (128,)
 
 
+def test_tile_cap_rejects_junk_with_clear_message(monkeypatch):
+    """Regression: a non-integer or <= 0 TT_CONTRACT_TILE used to crash
+    with an opaque int() ValueError deep in dispatch — the error must name
+    the env var (or the tile= argument) so the operator knows what to fix."""
+    from repro.kernels.tt_contract import ops
+
+    for junk in ("banana", "1.5", " ", "0", "-128"):
+        monkeypatch.setenv("TT_CONTRACT_TILE", junk)
+        with pytest.raises(ValueError, match="TT_CONTRACT_TILE"):
+            ops.resolve_tile_cap(1024)
+    # empty string is falsy → the adaptive default, not an error
+    monkeypatch.setenv("TT_CONTRACT_TILE", "")
+    assert ops.resolve_tile_cap(100)
+    monkeypatch.delenv("TT_CONTRACT_TILE", raising=False)
+    # the explicit argument gets the same validation, naming tile= instead
+    for junk in (0, -64, "pear"):
+        with pytest.raises(ValueError, match="tile="):
+            ops.resolve_tile_cap(1024, tile=junk)
+
+
 def test_tile_cap_changes_grid_not_result(rng):
     """Different tile caps pick different grids but identical outputs, and
     _grid_1d honors the cap it is given."""
