@@ -18,6 +18,9 @@
             driver (token parity + tok/s, dense and TT weights) and
             continuous batching vs padded lockstep on a heterogeneous
             request mix
+  serve_load  Front-door lane — N router replicas + asyncio SSE server
+            under a seeded closed-loop request storm (req/s, p50/p99
+            latency, slot occupancy; token parity vs isolated runs)
 
 ``--fast`` propagates to every benchmark that accepts a ``fast=`` kwarg
 (smaller sweeps, single method) — the CI smoke lane that catches
@@ -26,7 +29,8 @@ benchmark-script rot without paying full benchmark wall-clock.
 Headline numbers additionally persist as ``BENCH_<lane>.json`` at the repo
 root (``benchmarks/record.py``) so the perf trajectory is tracked across
 PRs, not just printed: ``decode_driver`` → BENCH_decode.json, ``tt_serve``/
-``tt_families`` → BENCH_tt_serve.json.
+``tt_families`` → BENCH_tt_serve.json, ``serve_load`` →
+BENCH_serve_load.json.
 """
 
 from __future__ import annotations
@@ -91,6 +95,11 @@ def bench_decode_driver(fast: bool = False):
     decode_driver.run(fast=fast)
 
 
+def bench_serve_load(fast: bool = False):
+    from benchmarks import serve_load
+    serve_load.run(fast=fast)
+
+
 ALL = {
     "table1": bench_table1,
     "table3": bench_table3,
@@ -101,6 +110,7 @@ ALL = {
     "tt_serve": bench_tt_serve,
     "tt_families": bench_tt_families,
     "decode_driver": bench_decode_driver,
+    "serve_load": bench_serve_load,
 }
 
 

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 For each cell this builds the production mesh, constructs
@@ -16,6 +13,10 @@ Usage:
   python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k [--multi-pod]
   python -m repro.launch.dryrun --all [--multi-pod] --out results/
 """
+
+# must happen before jax is imported (below) so the placeholder devices exist
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json

@@ -1,0 +1,357 @@
+"""Multi-replica request router: load-aware admission over N Engines.
+
+One Engine serves ``slots`` concurrent requests on one device (or mesh
+slice).  Scaling past that means N engine REPLICAS — same model, same
+params (shared host memory), independent cache pools — each driven by its
+own worker thread.  JAX releases the GIL while XLA executes, so replica
+chunks overlap on multicore hosts; on a single core they interleave but
+stay correct.
+
+The router owns three decisions the engine deliberately does not make:
+
+* **Placement** — ``submit`` picks the replica with the fewest
+  outstanding requests (pending + in-flight), breaking ties by lifetime
+  occupancy (least-loaded wins) and then lowest index.  The rule is pure
+  host arithmetic over counters the router itself maintains, so a seeded
+  request trace maps to replicas deterministically — testable without
+  ever starting the workers.
+* **Backpressure** — each replica admits at most ``queue_depth``
+  outstanding requests; when every replica is full, ``submit`` raises
+  ``QueueFull`` IMMEDIATELY (the HTTP layer turns this into 429).  A
+  bounded queue is the contract: a request is either admitted, rejected
+  now, or completed — never silently parked.
+* **Lifecycle** — per-request deadlines (checked between fused chunks;
+  an expired request is cancelled, its slot freed, and the ticket
+  resolves to ``DeadlineExpired``) and cancellation (client disconnects
+  propagate to ``Engine.cancel`` so abandoned requests stop burning
+  slot-steps).
+
+Results flow back through per-request ``Ticket``s: a thread-safe event
+queue carrying ``("delta", tokens)`` chunks for streaming consumers and a
+terminal ``("done", Completion)`` / ``("expired", None)`` /
+``("cancelled", None)`` / ``("error", msg)``.  ``Ticket.result()`` is the
+blocking convenience used by tests and the load benchmark;
+``launch/server.py`` bridges the same queue into asyncio for SSE.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.launch.engine import Completion, Engine
+
+
+class QueueFull(RuntimeError):
+    """Every replica is at its ``queue_depth`` bound — retry later (HTTP
+    429)."""
+
+
+class DeadlineExpired(RuntimeError):
+    """The request's deadline passed before it finished; its slot was
+    freed (HTTP 504)."""
+
+
+class RequestCancelled(RuntimeError):
+    """The request was cancelled (client disconnect / explicit cancel)."""
+
+
+class Ticket:
+    """Handle for one routed request.
+
+    ``events`` is a thread-safe queue of ``(kind, payload)`` tuples
+    emitted by the replica worker: zero or more ``("delta", np.ndarray)``
+    token chunks (streaming requests only), then exactly one terminal
+    event — ``("done", Completion)``, ``("expired", None)``,
+    ``("cancelled", None)``, or ``("error", str)``.
+    """
+
+    def __init__(self, rid: int, replica: int, stream: bool,
+                 deadline: Optional[float]):
+        self.rid = rid
+        self.replica = replica
+        self.stream = stream
+        self.deadline = deadline          # absolute time.monotonic() bound
+        self.events: "queue.Queue" = queue.Queue()
+        self.cancel_event = threading.Event()
+        self.done_event = threading.Event()
+        self._emit_lock = threading.Lock()
+        self._listener = None
+
+    def attach(self, fn) -> None:
+        """Route events to ``fn(event)`` (called from the replica worker
+        thread) instead of the pull queue; events already queued are
+        flushed to ``fn`` first, in order.  The HTTP server uses this to
+        bridge into asyncio via ``loop.call_soon_threadsafe`` — one
+        callback per event instead of one blocked executor thread per
+        in-flight request."""
+        with self._emit_lock:
+            while True:
+                try:
+                    fn(self.events.get_nowait())
+                except queue.Empty:
+                    break
+            self._listener = fn
+
+    def _emit(self, kind: str, payload=None) -> None:
+        with self._emit_lock:
+            if self._listener is not None:
+                self._listener((kind, payload))
+            else:
+                self.events.put((kind, payload))
+
+    def result(self, timeout: Optional[float] = None) -> Completion:
+        """Block until the terminal event; returns the Completion or
+        raises ``DeadlineExpired`` / ``RequestCancelled`` / ``RuntimeError``.
+        Streaming deltas drained on the way are discarded (streaming
+        consumers read ``events`` directly instead)."""
+        end = None if timeout is None else time.monotonic() + timeout
+        while True:
+            left = None if end is None else max(0.0, end - time.monotonic())
+            kind, payload = self.events.get(timeout=left)
+            if kind == "delta":
+                continue
+            if kind == "done":
+                return payload
+            if kind == "expired":
+                raise DeadlineExpired(f"request {self.rid} missed deadline")
+            if kind == "cancelled":
+                raise RequestCancelled(f"request {self.rid} cancelled")
+            raise RuntimeError(f"request {self.rid} failed: {payload}")
+
+
+class _Replica:
+    """One engine + its worker thread + the command mailbox."""
+
+    def __init__(self, index: int, engine: Engine):
+        self.index = index
+        self.engine = engine
+        self.commands: "queue.Queue" = queue.Queue()
+        self.outstanding = 0              # router-side counter (lock-guarded)
+        self.thread: Optional[threading.Thread] = None
+
+
+class Router:
+    """Load-aware front of N Engine replicas.
+
+    ``submit`` never blocks: it places the request (least-outstanding →
+    occupancy tiebreak → lowest index), bumps the chosen replica's
+    outstanding counter, and mails the work to its worker.  All engine
+    interaction — ``Engine.submit``, chunk stepping, cancellation,
+    harvest — happens on that replica's worker thread, so engines need no
+    locking.  ``start()`` spawns the workers; placement itself needs no
+    workers, which keeps the routing rule unit-testable as a pure
+    function of the trace.
+    """
+
+    def __init__(self, engines: List[Engine], queue_depth: int = 16):
+        if not engines:
+            raise ValueError("router needs at least one engine replica")
+        if queue_depth < 1:
+            raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+        self.replicas = [_Replica(i, e) for i, e in enumerate(engines)]
+        self.queue_depth = queue_depth
+        self._lock = threading.Lock()
+        self._rid = 0
+        self._stop = threading.Event()
+        self._started = False
+
+    # -- placement ----------------------------------------------------------
+
+    def pick_replica(self) -> int:
+        """The routing rule: fewest outstanding, then lowest lifetime
+        occupancy, then lowest index.  Raises ``QueueFull`` when every
+        replica is at the bound."""
+        with self._lock:
+            free = [r for r in self.replicas
+                    if r.outstanding < self.queue_depth]
+            if not free:
+                raise QueueFull(
+                    f"all {len(self.replicas)} replicas at queue_depth="
+                    f"{self.queue_depth}"
+                )
+            best = min(free, key=lambda r: (r.outstanding,
+                                            r.engine.occupancy, r.index))
+            return best.index
+
+    def submit(self, prompt, gen: int, src_tokens=None,
+               seed: Optional[int] = None,
+               temperature: Optional[float] = None,
+               top_k: Optional[int] = None,
+               deadline: Optional[float] = None,
+               stream: bool = False) -> Ticket:
+        """Place one request; returns its Ticket immediately.
+
+        ``deadline`` is seconds from now; expiry between chunks cancels
+        the request and frees its slot.  ``stream=True`` makes the worker
+        emit ``("delta", tokens)`` events after each fused chunk.
+        Raises ``ValueError`` on bad params (fail-fast, before placement)
+        and ``QueueFull`` when no replica has room.
+        """
+        # validate against replica 0 — replicas are homogeneous, and a bad
+        # request must be rejected before it consumes a queue slot
+        self.replicas[0].engine.validate(prompt, gen, src_tokens,
+                                         temperature, top_k)
+        idx = self.pick_replica()
+        rep = self.replicas[idx]
+        with self._lock:
+            rid = self._rid
+            self._rid += 1
+            rep.outstanding += 1
+        abs_deadline = (None if deadline is None
+                        else time.monotonic() + deadline)
+        ticket = Ticket(rid, idx, stream, abs_deadline)
+        rep.commands.put(("submit", ticket,
+                          (prompt, gen, src_tokens, seed, temperature,
+                           top_k)))
+        return ticket
+
+    def cancel(self, ticket: Ticket) -> None:
+        """Request cancellation; the replica worker acts on it at the next
+        chunk boundary (or before admission, if still queued)."""
+        ticket.cancel_event.set()
+        # wake the worker even when it is idle-blocking on its mailbox
+        self.replicas[ticket.replica].commands.put(("nudge", None, None))
+
+    # -- stats --------------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "queue_depth": self.queue_depth,
+                "replicas": [
+                    {
+                        "index": r.index,
+                        "outstanding": r.outstanding,
+                        "busy_slots": r.engine.busy_slots,
+                        "pending": r.engine.pending,
+                        "steps": r.engine.steps,
+                        "occupancy": round(r.engine.occupancy, 4),
+                    }
+                    for r in self.replicas
+                ],
+            }
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "Router":
+        if self._started:
+            return self
+        self._started = True
+        for rep in self.replicas:
+            rep.thread = threading.Thread(
+                target=self._worker, args=(rep,),
+                name=f"replica-{rep.index}", daemon=True,
+            )
+            rep.thread.start()
+        return self
+
+    def close(self) -> None:
+        if not self._started:
+            return
+        self._stop.set()
+        for rep in self.replicas:
+            rep.commands.put(("nudge", None, None))
+        for rep in self.replicas:
+            if rep.thread is not None:
+                rep.thread.join(timeout=30.0)
+        self._started = False
+        self._stop.clear()
+
+    def __enter__(self) -> "Router":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker -------------------------------------------------------------
+
+    def _finish(self, rep: _Replica, ticket: Ticket, kind: str,
+                payload=None) -> None:
+        with self._lock:
+            rep.outstanding -= 1
+        ticket._emit(kind, payload)
+        ticket.done_event.set()
+
+    def _worker(self, rep: _Replica) -> None:
+        eng = rep.engine
+        live = {}          # engine uid -> Ticket
+        sent = {}          # engine uid -> tokens already streamed
+        while True:
+            # drain the mailbox; block briefly when the engine is idle so
+            # an idle replica doesn't spin
+            block = not (eng.queue or any(o is not None
+                                          for o in eng._occupant))
+            if block and self._stop.is_set():
+                break
+            try:
+                while True:
+                    cmd, ticket, args = rep.commands.get(
+                        timeout=0.02 if block else 0)
+                    block = False
+                    if cmd == "nudge":
+                        continue
+                    prompt, gen, src, seed, temp, topk = args
+                    if ticket.cancel_event.is_set():
+                        self._finish(rep, ticket, "cancelled")
+                        continue
+                    now = time.monotonic()
+                    if ticket.deadline is not None and now > ticket.deadline:
+                        self._finish(rep, ticket, "expired")
+                        continue
+                    try:
+                        uid = eng.submit(prompt, gen, src_tokens=src,
+                                         seed=seed, temperature=temp,
+                                         top_k=topk)
+                    except Exception as e:        # validated upstream, but
+                        self._finish(rep, ticket, "error", str(e))
+                        continue
+                    live[uid] = ticket
+                    sent[uid] = 0
+            except queue.Empty:
+                pass
+            # deadline / cancellation sweep (between chunks — an engine
+            # cancel here frees the slot for the next admission sweep)
+            now = time.monotonic()
+            for uid, ticket in list(live.items()):
+                expired = (ticket.deadline is not None
+                           and now > ticket.deadline)
+                if ticket.cancel_event.is_set() or expired:
+                    eng.cancel(uid)
+                    self._finish(rep, ticket,
+                                 "expired" if expired else "cancelled")
+                    del live[uid]
+                    sent.pop(uid, None)
+            if not (eng.queue or any(o is not None for o in eng._occupant)):
+                continue
+            try:
+                done = eng.step_chunk()
+            except Exception as e:                # pragma: no cover
+                for uid, ticket in live.items():
+                    self._finish(rep, ticket, "error", str(e))
+                live.clear()
+                sent.clear()
+                continue
+            finished = {c.uid for c in done}
+            # stream per-chunk deltas for still-in-flight tickets (one
+            # device row read per streaming ticket per chunk)
+            for uid, ticket in live.items():
+                if not ticket.stream or uid in finished:
+                    continue
+                avail = eng.progress(uid)
+                if avail is not None and avail > sent[uid]:
+                    toks = eng.peek_tokens(uid)
+                    ticket._emit("delta", np.asarray(toks[sent[uid]:]))
+                    sent[uid] = avail
+            for c in done:
+                ticket = live.pop(c.uid, None)
+                n = sent.pop(c.uid, 0)
+                if ticket is None:
+                    continue              # cancelled earlier this loop
+                if ticket.stream and len(c.tokens) > n:
+                    ticket._emit("delta", c.tokens[n:])
+                self._finish(rep, ticket, "done", c)

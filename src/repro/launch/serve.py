@@ -3,6 +3,18 @@
     PYTHONPATH=src python -m repro.launch.serve \
         --arch gemma3-1b --reduced --batch 4 --prompt-len 32 --gen 16
 
+Two modes share one model-setup path (``--weights``/``--tt-*`` work in
+both):
+
+* **batch mode** (default) — one uniform batch through
+  ``launch/engine.generate``, timing + optional TT-vs-dense verify.
+* **server mode** (``--serve``) — the production front door: N Engine
+  replicas (``--replicas``/``--slots``/``--chunk-steps``) behind the
+  load-aware router, fronted by the asyncio HTTP server
+  (``--host``/``--port``; per-request deadlines via ``--deadline-ms``,
+  backpressure via ``--queue-depth``).  See docs/SERVING.md for the
+  operator's handbook.
+
 Decode runs through ``launch/engine.py``: the default ``--driver fused``
 executes the whole generation (prefill-by-stepping → sample → append →
 step) as one jitted ``lax.scan`` per phase — no host→device dispatch
@@ -175,6 +187,47 @@ def serve(args) -> dict:
     return {"tok_per_s": tps, "generated": gen}
 
 
+def serve_http(args) -> None:
+    """Server mode: N engine replicas behind the router + HTTP front door.
+
+    Replicas share one params pytree (host memory is shared; each replica
+    owns only its cache pool), so N replicas cost N cache pools, not N
+    copies of the weights.
+    """
+    from repro.launch.router import Router
+    from repro.launch.server import run_server
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build(cfg)
+    mesh = make_host_mesh(model_parallel=args.model_parallel)
+    shd.set_mesh_axis_sizes(mesh)
+    with mesh:
+        params = model.init(jax.random.PRNGKey(args.seed))
+        if args.weights == "tt":
+            params, _, byte_line = _tt_setup(params, args, cfg)
+            print(f"[serve] TT-native mode: {byte_line}")
+        max_len = args.prompt_len + args.gen
+        engines = [
+            engine_mod.Engine(
+                model, params, slots=args.slots, max_len=max_len,
+                chunk_steps=args.chunk_steps,
+                temperature=args.temperature, top_k=args.top_k,
+                seed=args.seed, admission=args.admission,
+            )
+            for _ in range(args.replicas)
+        ]
+        router = Router(engines, queue_depth=args.queue_depth)
+        deadline = (None if args.deadline_ms is None
+                    else args.deadline_ms / 1e3)
+        print(f"[serve] {args.replicas} replica(s) x {args.slots} slots, "
+              f"admission={engines[0].admission}, "
+              f"queue_depth={args.queue_depth}")
+        run_server(router, host=args.host, port=args.port,
+                   default_deadline=deadline)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -218,8 +271,37 @@ def main() -> None:
                          "pass — use --no-verify for the pure-TT resident "
                          "footprint)")
     ap.add_argument("--no-verify", dest="verify", action="store_false")
+    ap.add_argument("--serve", action="store_true",
+                    help="server mode: run the HTTP front door instead of "
+                         "one batch (POST /v1/generate; see docs/SERVING.md)")
+    ap.add_argument("--host", type=str, default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="TCP port (0 = ephemeral, printed at startup)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the router (weights are "
+                         "shared; each replica adds one cache pool + worker)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent requests per replica (cache pool rows)")
+    ap.add_argument("--chunk-steps", type=int, default=8,
+                    help="fused decode steps per scheduling chunk")
+    ap.add_argument("--queue-depth", type=int, default=16,
+                    help="max outstanding requests per replica before "
+                         "submissions get 429 (bounded admission queue)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="server-wide default per-request deadline; an "
+                         "expired request is cancelled (504) and its slot "
+                         "freed.  Requests can override via 'deadline_ms'")
+    ap.add_argument("--admission", choices=engine_mod.ADMISSION_MODES,
+                    default="auto",
+                    help="slot admission: 'scan' = in-scan device-resident "
+                         "queue (token-only families), 'boundary' = one "
+                         "dispatch per admission between chunks (encdec); "
+                         "'auto' picks per family")
     args = ap.parse_args()
-    serve(args)
+    if args.serve:
+        serve_http(args)
+    else:
+        serve(args)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,21 @@
-"""Shared model building blocks: norms, RoPE, embeddings, initializers.
+"""Shared model machinery: building blocks, TT-serving registry, decode driver.
+
+Three layers live here (everything family-agnostic; per-family code stays
+in its own module):
+
+  * **building blocks** — norms, RoPE, embeddings, initializers, and
+    ``dense_apply``/``expert_apply``, the single raw-vs-TT weight dispatch
+    points every matmul in the zoo routes through;
+  * **TT-native serving plumbing** — the per-family rule registry
+    (``register_tt_serve_rules``/``tt_native_params``) and the TT-aware
+    layer scan (``tt_scan``/``layer_at``) that keep TT cores closure
+    constants of every scanned forward/decode body;
+  * **the fused decode driver** — ``GenState``/``gen_init``/``gen_step``/
+    ``gen_scan``: the whole generation loop (prompt consumption, sampling,
+    append, step) as one ``lax.scan`` computation, including per-slot
+    sampling params, the device-resident admission queue (``ScanQueue``)
+    and the retired-slot output buffer (``DoneBuf``) the continuous-
+    batching engine schedules against.
 
 Conventions (used by every arch in the zoo):
   * parameters are nested dicts; per-layer tensors are STACKED on a leading
@@ -239,15 +256,23 @@ class Sampling(NamedTuple):
                   logits by 1/temperature before categorical sampling.
     top_k       — keep only the k highest logits before sampling (ties at
                   the k-th value are all kept); None disables the filter.
+    per_slot    — ignore the two static fields and sample each slot under
+                  its own ``GenState.temp``/``GenState.topk`` entry (the
+                  per-request sampling params the continuous-batching
+                  engine writes at admission).  Slots with ``temp == 0``
+                  take the greedy argmax — token-identical to the static
+                  greedy path.
 
     The tuple is hashable, so it rides the jitted drivers as a static
-    argument — each distinct (temperature, top_k) compiles once.
+    argument — each distinct (temperature, top_k, per_slot) compiles once.
     """
     temperature: float = 0.0
     top_k: Optional[int] = None
+    per_slot: bool = False
 
 
 GREEDY = Sampling()
+PER_SLOT = Sampling(per_slot=True)
 
 
 def make_sampling(temperature: float, top_k: Optional[int]) -> Sampling:
@@ -295,12 +320,131 @@ def sample_tokens(logits: jax.Array, keys: jax.Array,
     return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
 
 
+def sample_tokens_per_slot(logits: jax.Array, keys: jax.Array,
+                           temperature: jax.Array,
+                           top_k: jax.Array) -> jax.Array:
+    """Per-slot temperature/top-k sampling: slot ``i`` samples under
+    ``(temperature[i], top_k[i])`` — the per-request params the engine
+    writes at admission (``top_k == 0`` disables the filter for that slot).
+
+    Value-identical to the static ``sample_tokens`` path at equal params
+    (same scaling, same kth-largest threshold with ties kept, same
+    per-row categorical keys), so a request sampled in a mixed-params slot
+    pool matches its isolated static-``Sampling`` run token for token.
+    Slots with ``temperature == 0`` take the greedy argmax of the raw
+    logits — token-identical to the static greedy path (the PRNG math is
+    traced but its result discarded by the select).
+    """
+    v = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
+    scaled = lf / safe_t[:, None]
+    # per-row kth-largest threshold: a descending sort's (k-1)-th column is
+    # exactly lax.top_k(scaled, k)[0][..., -1] — but k may differ per row
+    srt = -jnp.sort(-scaled, axis=-1)
+    k = jnp.where(top_k > 0, top_k, v)
+    kth = jnp.take_along_axis(srt, jnp.clip(k - 1, 0, v - 1)[:, None], axis=1)
+    scaled = jnp.where(scaled >= kth, scaled, jnp.asarray(-1e30, jnp.float32))
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)
+
+
+class ScanQueue(NamedTuple):
+    """Device-resident admission queue the fused scan admits from.
+
+    A FIFO of pending requests living ON the device, so a retired slot is
+    refilled inside the scan body (at most one whole-pool admission sweep
+    per step) — a fused chunk never has to end at a boundary just to admit.
+    The host refills the buffers between chunks (one donated dispatch) and
+    mirrors the admission arithmetic exactly (deterministic lengths, FIFO
+    order, lowest-free-slot placement), so scheduling still needs no
+    device→host readback.
+
+    tokens (Q, T_max) / prompt_len (Q,) / total_len (Q,) / rng (Q, 2) /
+    temp (Q,) / topk (Q,) — one pending request per row, same meaning as
+    the GenState per-slot fields they are copied into at admission;
+    head () — next row to admit;  size () — valid rows.
+    """
+    tokens: jax.Array
+    prompt_len: jax.Array
+    total_len: jax.Array
+    rng: jax.Array
+    temp: jax.Array
+    topk: jax.Array
+    head: jax.Array
+    size: jax.Array
+
+
+class DoneBuf(NamedTuple):
+    """Retired-slot output rows, appended inside the scan.
+
+    With in-scan admission a slot can retire AND be re-occupied within one
+    chunk, overwriting its token row — so the step that retires a slot
+    first copies its tokens/prompt_logits here (slot order within a step;
+    ``count`` rows are valid).  The host drains the buffer at the chunk
+    boundary and resets ``count`` in the refill dispatch.
+    """
+    tokens: jax.Array          # (D, T_max) int32
+    prompt_logits: jax.Array   # (D, V) fp32
+    count: jax.Array           # () int32
+
+
+def make_scan_queue(capacity: int, t_max: int) -> ScanQueue:
+    """An empty device queue (all rows invalid)."""
+    return ScanQueue(
+        tokens=jnp.zeros((capacity, t_max), jnp.int32),
+        prompt_len=jnp.ones((capacity,), jnp.int32),
+        total_len=jnp.ones((capacity,), jnp.int32),
+        rng=jnp.zeros((capacity, 2), jnp.uint32),
+        temp=jnp.zeros((capacity,), jnp.float32),
+        topk=jnp.zeros((capacity,), jnp.int32),
+        head=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_done_buf(capacity: int, t_max: int, vocab: int) -> DoneBuf:
+    """An empty retired-slot output buffer."""
+    return DoneBuf(
+        tokens=jnp.zeros((capacity, t_max), jnp.int32),
+        prompt_logits=jnp.zeros((capacity, vocab), jnp.float32),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def zero_slot_leaf(leaf, i):
+    """Zero one slot's rows of a cache leaf.  Convention (every family):
+    the only 1-D cache leaves are the per-slot ``pos``/``mem_len``
+    counters; everything else stacks (L, B, ...) with the slot axis second.
+    Memory-awareness: zeroing an encdec slot leaves ``mem_len`` at 0 —
+    every cross-attention memory row masked — which decodes exactly as the
+    zeroed ``mem_k``/``mem_v`` rows would (zero output), so a token-only
+    request admitted after an encdec occupant can never see stale memory.
+    ``admit_memory`` then overwrites the memory rows + ``mem_len`` for
+    requests that DO carry encoder input."""
+    if leaf.ndim == 1:
+        return leaf.at[i].set(0)
+    return leaf.at[:, i].set(jnp.zeros_like(leaf[:, i]))
+
+
+def _zero_slot_leaf_masked(leaf, i, on):
+    """``zero_slot_leaf`` under a traced predicate: when ``on`` is False
+    the slot's rows are written back unchanged (an O(row) no-op, never an
+    O(leaf) one — only slot ``i``'s rows are touched either way)."""
+    if leaf.ndim == 1:
+        return leaf.at[i].set(jnp.where(on, jnp.zeros_like(leaf[i]), leaf[i]))
+    row = leaf[:, i]
+    return leaf.at[:, i].set(jnp.where(on, jnp.zeros_like(row), row))
+
+
 class GenState(NamedTuple):
     """Per-slot generation state the fused decode driver scans over.
 
     The device never hands control back to Python between tokens: prompt
-    consumption, sampling, and append all happen inside the scan body, so a
-    whole generation (or a continuous-batching chunk) is one dispatch.
+    consumption, sampling, append — and, when a queue is attached, slot
+    admission and retired-slot harvest — all happen inside the scan body,
+    so a whole generation (or a continuous-batching chunk) is one dispatch.
 
     tokens      — (B, T_max) token buffer: prompt tokens up front, generated
                   tokens appended in place at the slot's position;
@@ -315,6 +459,15 @@ class GenState(NamedTuple):
                   ``fold_in(rng[slot], t)``, a function of slot-local
                   progress only — so a request samples identically isolated
                   or staggered, whatever slot or step it lands on.
+    temp / topk — (B,) fp32 / int32 per-slot sampling params, written at
+                  admission alongside ``rng`` and read by the
+                  ``Sampling(per_slot=True)`` driver mode (``topk == 0``
+                  disables the top-k filter for that slot).  ``None`` on the
+                  uniform-batch ``generate`` path, which samples under a
+                  static engine-wide ``Sampling`` instead.
+    queue / done — optional device-resident admission queue and retired-
+                  slot output buffer (in-scan continuous batching); ``None``
+                  on the uniform-batch path and under boundary admission.
     """
     cache: object
     tokens: jax.Array
@@ -323,11 +476,23 @@ class GenState(NamedTuple):
     active: jax.Array
     prompt_logits: jax.Array
     rng: jax.Array
+    temp: Optional[jax.Array] = None
+    topk: Optional[jax.Array] = None
+    queue: Optional[ScanQueue] = None
+    done: Optional[DoneBuf] = None
 
 
 def gen_init(cache, tokens, prompt_len, total_len, vocab: int,
-             active=None, rng=None) -> GenState:
-    """Pack a slot pool into a GenState (per-slot lengths may differ)."""
+             active=None, rng=None, temp=None, topk=None,
+             queue: Optional[ScanQueue] = None,
+             done: Optional[DoneBuf] = None) -> GenState:
+    """Pack a slot pool into a GenState (per-slot lengths may differ).
+
+    ``temp``/``topk`` attach per-slot sampling params ((B,) arrays, used by
+    ``Sampling(per_slot=True)``); ``queue``/``done`` attach the in-scan
+    admission machinery.  All four default to None — the uniform-batch
+    ``generate`` path carries none of them.
+    """
     tokens = jnp.asarray(tokens, jnp.int32)
     b = tokens.shape[0]
     prompt_len = jnp.broadcast_to(
@@ -345,7 +510,86 @@ def gen_init(cache, tokens, prompt_len, total_len, vocab: int,
         active=jnp.broadcast_to(jnp.asarray(active, bool), (b,)),
         prompt_logits=jnp.zeros((b, vocab), jnp.float32),
         rng=jnp.asarray(rng, jnp.uint32),
+        temp=None if temp is None else jnp.asarray(temp, jnp.float32),
+        topk=None if topk is None else jnp.asarray(topk, jnp.int32),
+        queue=queue,
+        done=done,
     )
+
+
+def _scan_admit(state: GenState) -> GenState:
+    """In-scan admission sweep (runs at the top of every ``gen_step`` when
+    a queue is attached): fill free slots from the device queue, FIFO,
+    lowest slot index first.  Admission copies the queue row into the slot
+    (lengths, prompt row, rng, sampling params), zeroes the slot's cache
+    rows, and activates it — the slot consumes its first prompt token in
+    the very same step.  The whole sweep is skipped via ``lax.cond`` when
+    nothing is admittable (no free slot or empty queue), so steady-state
+    full-occupancy steps pay only the predicate.
+
+    The host mirrors this arithmetic exactly (same FIFO order, same slot
+    placement, same step) to track which request occupies which slot
+    without reading the device.
+    """
+    b = state.tokens.shape[0]
+    qcap = state.queue.tokens.shape[0]
+
+    def sweep(s: GenState) -> GenState:
+        q = s.queue
+        cache, tokens, plog = s.cache, s.tokens, s.prompt_logits
+        plen, tlen, act = s.prompt_len, s.total_len, s.active
+        rng, temp, topk = s.rng, s.temp, s.topk
+        head = q.head
+        for i in range(b):
+            admit = jnp.logical_and(~act[i], head < q.size)
+            idx = jnp.clip(head, 0, qcap - 1)
+            cache = jax.tree.map(
+                lambda leaf, i=i, on=admit: _zero_slot_leaf_masked(
+                    leaf, i, on),
+                cache,
+            )
+            tokens = tokens.at[i].set(
+                jnp.where(admit, q.tokens[idx], tokens[i]))
+            plen = plen.at[i].set(jnp.where(admit, q.prompt_len[idx],
+                                            plen[i]))
+            tlen = tlen.at[i].set(jnp.where(admit, q.total_len[idx],
+                                            tlen[i]))
+            rng = rng.at[i].set(jnp.where(admit, q.rng[idx], rng[i]))
+            temp = temp.at[i].set(jnp.where(admit, q.temp[idx], temp[i]))
+            topk = topk.at[i].set(jnp.where(admit, q.topk[idx], topk[i]))
+            plog = plog.at[i].set(
+                jnp.where(admit, jnp.zeros_like(plog[i]), plog[i]))
+            act = act.at[i].set(jnp.logical_or(admit, act[i]))
+            head = head + admit.astype(jnp.int32)
+        return s._replace(
+            cache=cache, tokens=tokens, prompt_len=plen, total_len=tlen,
+            active=act, prompt_logits=plog, rng=rng, temp=temp, topk=topk,
+            queue=q._replace(head=head),
+        )
+
+    admittable = jnp.logical_and(state.queue.head < state.queue.size,
+                                 jnp.any(~state.active))
+    return jax.lax.cond(admittable, sweep, lambda s: s, state)
+
+
+def _scan_harvest(state: GenState, retired: jax.Array) -> GenState:
+    """Copy slots that retired THIS step into the done buffer (slot order),
+    before a later in-scan admission can overwrite their token rows.
+    Skipped via ``lax.cond`` on steps with no retirement."""
+    b = state.tokens.shape[0]
+    dcap = state.done.tokens.shape[0]
+
+    def sweep(s: GenState) -> GenState:
+        dt, dl, cnt = s.done.tokens, s.done.prompt_logits, s.done.count
+        for i in range(b):
+            r = retired[i]
+            w = jnp.clip(cnt, 0, dcap - 1)
+            dt = dt.at[w].set(jnp.where(r, s.tokens[i], dt[w]))
+            dl = dl.at[w].set(jnp.where(r, s.prompt_logits[i], dl[w]))
+            cnt = cnt + r.astype(jnp.int32)
+        return s._replace(done=DoneBuf(dt, dl, cnt))
+
+    return jax.lax.cond(jnp.any(retired), sweep, lambda s: s, state)
 
 
 def gen_step(decode_step, params, state: GenState,
@@ -355,12 +599,21 @@ def gen_step(decode_step, params, state: GenState,
     A slot at position p consumes tokens[p] — a prompt token while
     p < prompt_len (prefill-by-stepping), its own previous sample after —
     and samples the token for p+1 (greedy argmax, or temperature/top-k
-    under the slot's own PRNG stream).  Inactive slots are frozen: their
+    under the slot's own PRNG stream; per-slot params under
+    ``Sampling(per_slot=True)``).  Inactive slots are frozen: their
     cache.pos is pinned so the batched decode_step re-writes the same cache
     row with the same values (idempotent), and their buffers are left
     untouched.  Every update is a masked select, so heterogeneous slots run
     in lockstep without branching.
+
+    When ``state.queue`` is attached, the step opens with an in-scan
+    admission sweep (free slots refill from the device queue and consume
+    their first prompt token this very step); when ``state.done`` is
+    attached, slots that retire this step are copied into the done buffer
+    before the next step's admission can overwrite their rows.
     """
+    if state.queue is not None:
+        state = _scan_admit(state)
     cache = state.cache
     pos = cache.pos                                        # (B,) per-slot
     t_max = state.tokens.shape[1]
@@ -371,7 +624,11 @@ def gen_step(decode_step, params, state: GenState,
     adv = state.active
     cache = cache._replace(pos=jnp.where(adv, cache.pos, pos))
     newpos = cache.pos
-    if sampling.temperature == 0.0:
+    if sampling.per_slot:
+        gen_idx = jnp.maximum(newpos - state.prompt_len, 0)
+        keys = jax.vmap(jax.random.fold_in)(state.rng, gen_idx)
+        nxt = sample_tokens_per_slot(logits, keys, state.temp, state.topk)
+    elif sampling.temperature == 0.0:
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy sample
     else:
         # key = fold_in(slot base key, # tokens this slot has generated) —
@@ -391,10 +648,13 @@ def gen_step(decode_step, params, state: GenState,
     )
     # the step that writes the slot's last token (index total_len-1) retires it
     active = adv & (newpos <= state.total_len - 2)
-    return state._replace(
+    state = state._replace(
         cache=cache, tokens=tokens, active=active,
         prompt_logits=prompt_logits,
     )
+    if state.done is not None:
+        state = _scan_harvest(state, adv & ~active)
+    return state
 
 
 def gen_scan(decode_step, params, state: GenState, n_steps: int,

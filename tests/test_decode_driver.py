@@ -254,3 +254,65 @@ def test_engine_more_requests_than_slots():
             for _ in range(3)]
     done = {c.uid for c in eng.run()}
     assert done == set(uids)
+
+
+def test_per_request_sampling_params_ride_slots():
+    """Per-request sampling is honored PER SLOT: greedy, high-temperature,
+    and temperature+top-k requests decode concurrently in one pool and
+    each matches its own isolated run token-for-token — in BOTH admission
+    modes (the per-slot temp/topk rows ride ``GenState`` either way)."""
+    cfg, model, params = _model_and_params("qwen1.5-0.5b")
+    rng = np.random.default_rng(7)
+    specs = [                     # (plen, gen, temperature, top_k, seed)
+        (4, 5, 0.0, None, 0),     # greedy rides next to sampled neighbours
+        (3, 6, 1.1, None, 5),
+        (5, 4, 0.7, 16, 9),
+        (2, 6, 0.9, 32, 3),
+    ]
+    prompts = [rng.integers(0, cfg.vocab_size, (p,), np.int32)
+               for p, *_ in specs]
+    for admission in ("scan", "boundary"):
+        eng = Engine(model, params, slots=2, max_len=24, chunk_steps=3,
+                     admission=admission)
+        uids = [eng.submit(prompts[i], g, seed=s, temperature=t, top_k=k)
+                for i, (_, g, t, k, s) in enumerate(specs)]
+        done = {c.uid: c for c in eng.run()}
+        for i, (_, g, t, k, s) in enumerate(specs):
+            iso = generate(model, params, prompts[i][None], g,
+                           driver="fused", temperature=t, top_k=k, seed=s)
+            np.testing.assert_array_equal(
+                done[uids[i]].tokens, iso["gen"][0],
+                err_msg=f"admission={admission} spec={specs[i]}",
+            )
+
+
+def test_scan_and_boundary_admission_agree():
+    """The in-scan device-resident queue is an OPTIMIZATION, not a new
+    semantics: the same staggered request stream produces byte-identical
+    completions (tokens AND prompt logits) under both admission modes."""
+    cfg, model, params = _model_and_params("qwen1.5-0.5b")
+    rng = np.random.default_rng(8)
+    reqs = [(rng.integers(0, cfg.vocab_size, (p,), np.int32), g)
+            for p, g in REQS]
+    outs = {}
+    for admission in ("scan", "boundary"):
+        eng = Engine(model, params, slots=2, max_len=24, chunk_steps=3,
+                     admission=admission)
+        uids = [eng.submit(p, g, seed=i) for i, (p, g) in enumerate(reqs)]
+        done = {c.uid: c for c in eng.run()}
+        outs[admission] = [done[u] for u in uids]
+        assert eng.admission == admission
+    for a, b in zip(outs["scan"], outs["boundary"]):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_array_equal(
+            np.asarray(a.prompt_logits), np.asarray(b.prompt_logits))
+
+
+def test_scan_admission_rejected_for_encdec():
+    """Admission-mode guard: encdec admission runs the encode host-side,
+    so an explicit ``admission='scan'`` must fail fast (auto = boundary)."""
+    cfg, model, params = _model_and_params("seamless-m4t-large-v2")
+    with pytest.raises(ValueError, match="boundary"):
+        Engine(model, params, slots=2, max_len=16, admission="scan")
+    eng = Engine(model, params, slots=2, max_len=16, admission="auto")
+    assert eng.admission == "boundary"

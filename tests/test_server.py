@@ -1,0 +1,304 @@
+"""The wired front door: router placement, backpressure, deadlines, HTTP.
+
+What the serving layer promises on top of the engine:
+
+  * placement is DETERMINISTIC — least-outstanding, occupancy tiebreak,
+    lowest index — a pure function of router counters, testable without
+    ever starting a worker thread;
+  * backpressure is a bounded queue: when every replica is at
+    ``queue_depth`` the submit fails NOW (``QueueFull`` / HTTP 429), it
+    never parks the request or hangs the client;
+  * a deadline that expires mid-flight cancels the request AND frees its
+    slot — the next request admits into the freed slot and still matches
+    its isolated run;
+  * the HTTP surface round-trips everything: non-streaming and SSE
+    responses are token-for-token the isolated fused run (per-request
+    sampling params ride the wire), errors map to 400/429/504, and a
+    client disconnect propagates to ``Engine.cancel``.
+"""
+
+import http.client
+import json
+import socket
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.engine import Engine, generate
+from repro.launch.router import (
+    DeadlineExpired, QueueFull, RequestCancelled, Router,
+)
+from repro.launch.server import serve_in_thread
+from repro.models.registry import build
+
+ARCH = "qwen1.5-0.5b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config(ARCH).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engines(model, params, n, slots=2, max_len=24, chunk_steps=3):
+    return [Engine(model, params, slots=slots, max_len=max_len,
+                   chunk_steps=chunk_steps) for _ in range(n)]
+
+
+def _prompt(cfg, n, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, (n,), np.int32)
+
+
+# -- router (no workers needed) ---------------------------------------------
+
+def test_router_places_deterministically(setup):
+    """A seeded trace maps to replicas as a pure function of the
+    outstanding counters: round-robin while balanced, least-loaded when
+    not — byte-for-byte reproducible without starting any worker."""
+    cfg, model, params = setup
+    router = Router(_engines(model, params, 3), queue_depth=8)
+    p = _prompt(cfg, 4)
+    picks = [router.submit(p, 3).replica for _ in range(7)]
+    assert picks == [0, 1, 2, 0, 1, 2, 0]
+    # a replica relieved of load (cancelled ticket) is preferred again
+    t = router.submit(p, 3)           # -> replica 1 (outstanding 3,2,2)
+    assert t.replica == 1
+    router.cancel(t)                  # cancel is async; counter still held
+    assert router.stats()["replicas"][1]["outstanding"] == 3
+
+
+def test_router_queue_full_is_immediate(setup):
+    """Backpressure, not a hang: with every replica at queue_depth the
+    submit raises QueueFull right away (bounded admission queue)."""
+    cfg, model, params = setup
+    router = Router(_engines(model, params, 2), queue_depth=1)
+    p = _prompt(cfg, 3)
+    router.submit(p, 3)
+    router.submit(p, 3)
+    t0 = time.monotonic()
+    with pytest.raises(QueueFull):
+        router.submit(p, 3)
+    assert time.monotonic() - t0 < 1.0
+
+
+def test_router_rejects_bad_request_before_placement(setup):
+    cfg, model, params = setup
+    router = Router(_engines(model, params, 1), queue_depth=2)
+    with pytest.raises(ValueError, match="temperature"):
+        router.submit(_prompt(cfg, 3), 3, temperature=-1.0)
+    assert router.stats()["replicas"][0]["outstanding"] == 0
+
+
+def test_router_deadline_expiry_frees_slot(setup):
+    """An expired request is cancelled between chunks and its SLOT comes
+    back: the next request admits and still matches its isolated run."""
+    cfg, model, params = setup
+    router = Router(_engines(model, params, 1, slots=1), queue_depth=4)
+    with router:
+        doomed = router.submit(_prompt(cfg, 4, seed=1), 12, deadline=0.0)
+        with pytest.raises(DeadlineExpired):
+            doomed.result(timeout=60)
+        p = _prompt(cfg, 3, seed=2)
+        ok = router.submit(p, 4, seed=7)
+        comp = ok.result(timeout=120)
+    iso = generate(model, params, p[None], 4, driver="fused", seed=7)
+    np.testing.assert_array_equal(comp.tokens, iso["gen"][0])
+    stats = router.stats()["replicas"][0]
+    assert stats["outstanding"] == 0 and stats["busy_slots"] == 0
+
+
+def test_router_cancel_resolves_ticket(setup):
+    cfg, model, params = setup
+    router = Router(_engines(model, params, 1, slots=1), queue_depth=4)
+    with router:
+        t = router.submit(_prompt(cfg, 4), 12)
+        router.cancel(t)
+        with pytest.raises(RequestCancelled):
+            t.result(timeout=60)
+
+
+def test_routed_completions_match_isolated(setup):
+    """Sanity across the whole router path: heterogeneous requests with
+    per-request seeds spread over 2 replicas all match isolated runs."""
+    cfg, model, params = setup
+    rng = np.random.default_rng(3)
+    router = Router(_engines(model, params, 2), queue_depth=8)
+    with router:
+        reqs = []
+        for i, (plen, gen) in enumerate([(5, 4), (3, 6), (2, 5), (6, 3)]):
+            p = rng.integers(0, cfg.vocab_size, (plen,), np.int32)
+            reqs.append((router.submit(p, gen, seed=i), p, gen, i))
+        for t, p, gen, i in reqs:
+            comp = t.result(timeout=120)
+            iso = generate(model, params, p[None], gen, driver="fused",
+                           seed=i)
+            np.testing.assert_array_equal(comp.tokens, iso["gen"][0])
+
+
+# -- HTTP surface -----------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def http_server(setup):
+    cfg, model, params = setup
+    router = Router(_engines(model, params, 2), queue_depth=4)
+    server, shutdown = serve_in_thread(router)
+    yield cfg, model, params, server, router
+    shutdown()
+
+
+def _post(port, body, timeout=120):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=timeout)
+    conn.request("POST", "/v1/generate", json.dumps(body),
+                 {"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    status, data = resp.status, resp.read()
+    conn.close()
+    return status, data
+
+
+def _get(port, path, timeout=30):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=timeout)
+    conn.request("GET", path)
+    resp = conn.getresponse()
+    status, data = resp.status, resp.read()
+    conn.close()
+    return status, data
+
+
+def test_http_healthz_and_stats(http_server):
+    cfg, model, params, server, router = http_server
+    status, data = _get(server.port, "/healthz")
+    assert status == 200 and json.loads(data) == {"ok": True}
+    status, data = _get(server.port, "/stats")
+    stats = json.loads(data)
+    assert status == 200 and len(stats["replicas"]) == 2
+
+
+def test_http_generate_parity_and_sampling(http_server):
+    """Per-request sampling params ride the wire: greedy and sampled
+    requests both match their isolated fused runs token-for-token."""
+    cfg, model, params, server, router = http_server
+    p = _prompt(cfg, 4, seed=5).tolist()
+    status, data = _post(server.port, {"prompt": p, "gen": 5, "seed": 7})
+    out = json.loads(data)
+    iso = generate(model, params, np.asarray(p, np.int32)[None], 5,
+                   driver="fused", seed=7)
+    assert status == 200 and out["tokens"] == iso["gen"][0].tolist()
+    status, data = _post(server.port, {
+        "prompt": p, "gen": 5, "seed": 3, "temperature": 0.9, "top_k": 16})
+    out = json.loads(data)
+    iso = generate(model, params, np.asarray(p, np.int32)[None], 5,
+                   driver="fused", seed=3, temperature=0.9, top_k=16)
+    assert status == 200 and out["tokens"] == iso["gen"][0].tolist()
+
+
+def test_http_stream_sse_parity(http_server):
+    """SSE deltas, reassembled in order, are exactly the isolated run's
+    tokens, and the terminal ``done`` event repeats the full list."""
+    cfg, model, params, server, router = http_server
+    p = _prompt(cfg, 4, seed=6).tolist()
+    conn = http.client.HTTPConnection("127.0.0.1", server.port, timeout=120)
+    conn.request("POST", "/v1/generate", json.dumps(
+        {"prompt": p, "gen": 6, "seed": 9, "stream": True}))
+    resp = conn.getresponse()
+    assert resp.status == 200
+    assert resp.getheader("Content-Type") == "text/event-stream"
+    raw = resp.read().decode()
+    conn.close()
+    deltas, done = [], None
+    for block in raw.strip().split("\n\n"):
+        lines = block.split("\n")
+        event = [ln[7:] for ln in lines if ln.startswith("event: ")]
+        data = [json.loads(ln[6:]) for ln in lines
+                if ln.startswith("data: ")]
+        if event and event[0] == "done":
+            done = data[0]
+        else:
+            deltas.extend(data[0]["tokens"])
+    iso = generate(model, params, np.asarray(p, np.int32)[None], 6,
+                   driver="fused", seed=9)
+    assert deltas == done["tokens"] == iso["gen"][0].tolist()
+
+
+def test_http_bad_request_400(http_server):
+    cfg, model, params, server, router = http_server
+    status, data = _post(server.port, {"prompt": [1, 2], "gen": 4,
+                                       "temperature": -2.0})
+    assert status == 400 and "temperature" in json.loads(data)["error"]
+    status, data = _post(server.port, {"gen": 4})
+    assert status == 400
+
+
+def test_http_deadline_504_then_recovers(http_server):
+    cfg, model, params, server, router = http_server
+    p = _prompt(cfg, 3, seed=8).tolist()
+    status, data = _post(server.port,
+                         {"prompt": p, "gen": 10, "deadline_ms": 0})
+    assert status == 504 and "deadline" in json.loads(data)["error"]
+    status, data = _post(server.port, {"prompt": p, "gen": 3})
+    assert status == 200
+
+
+def test_http_queue_full_429(setup):
+    """With one slot and queue_depth=1, a second request while the first
+    is mid-generation gets 429 + Retry-After immediately."""
+    cfg, model, params = setup
+    router = Router(_engines(model, params, 1, slots=1, max_len=64,
+                             chunk_steps=2), queue_depth=1)
+    server, shutdown = serve_in_thread(router)
+    try:
+        p = _prompt(cfg, 3, seed=4).tolist()
+        # park a long request without reading its (streaming) response
+        sock = socket.create_connection(("127.0.0.1", server.port),
+                                        timeout=60)
+        body = json.dumps({"prompt": p, "gen": 48, "stream": True}).encode()
+        sock.sendall(b"POST /v1/generate HTTP/1.1\r\nHost: x\r\n"
+                     b"Content-Length: " + str(len(body)).encode()
+                     + b"\r\n\r\n" + body)
+        # wait until it is actually outstanding, then expect 429
+        for _ in range(200):
+            if router.stats()["replicas"][0]["outstanding"] > 0:
+                break
+            time.sleep(0.02)
+        status, data = _post(server.port, {"prompt": p, "gen": 3})
+        assert status == 429, (status, data)
+        sock.close()
+    finally:
+        shutdown()
+
+
+def test_http_disconnect_cancels_request(setup):
+    """Dropping the socket mid-stream propagates to Engine.cancel: the
+    replica goes fully idle instead of decoding for a dead client."""
+    cfg, model, params = setup
+    router = Router(_engines(model, params, 1, slots=1, max_len=64,
+                             chunk_steps=2), queue_depth=4)
+    server, shutdown = serve_in_thread(router)
+    try:
+        p = _prompt(cfg, 3, seed=4).tolist()
+        sock = socket.create_connection(("127.0.0.1", server.port),
+                                        timeout=60)
+        body = json.dumps({"prompt": p, "gen": 48, "stream": True}).encode()
+        sock.sendall(b"POST /v1/generate HTTP/1.1\r\nHost: x\r\n"
+                     b"Content-Length: " + str(len(body)).encode()
+                     + b"\r\n\r\n" + body)
+        buf = b""
+        while b"data: " not in buf:      # at least one delta arrived
+            buf += sock.recv(4096)
+        sock.close()                     # client walks away
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            rep = router.stats()["replicas"][0]
+            if rep["outstanding"] == 0 and rep["busy_slots"] == 0:
+                break
+            time.sleep(0.1)
+        rep = router.stats()["replicas"][0]
+        assert rep["outstanding"] == 0 and rep["busy_slots"] == 0, rep
+    finally:
+        shutdown()
