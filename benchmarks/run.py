@@ -13,7 +13,11 @@
             from TT cores (tok/s + resident weight bytes)
   tt_families  TT-native coverage sweep — logit parity + byte reduction on
             one reduced config per family (transformer/encdec/mamba2/
-            rglru/MoE); a family regressing to reconstruct fails the lane
+            rglru/MoE); a family regressing to reconstruct fails the lane.
+            Also runs the quantized gate (see tt_quant) on reduced gemma3.
+  tt_quant  Quantized TT serving — int8 cores + fused in-kernel dequant on
+            reduced gemma3; gates ≥99% next-token agreement vs the dense
+            oracle and ≥1.8x TT-served-leaf byte reduction vs bf16 cores
   decode_driver  Serving-runtime lane — python-loop vs fused-scan decode
             driver (token parity + tok/s, dense and TT weights) and
             continuous batching vs padded lockstep on a heterogeneous
@@ -29,7 +33,8 @@ benchmark-script rot without paying full benchmark wall-clock.
 Headline numbers additionally persist as ``BENCH_<lane>.json`` at the repo
 root (``benchmarks/record.py``) so the perf trajectory is tracked across
 PRs, not just printed: ``decode_driver`` → BENCH_decode.json, ``tt_serve``/
-``tt_families`` → BENCH_tt_serve.json, ``serve_load`` →
+``tt_families`` → BENCH_tt_serve.json, ``tt_quant`` (and the quantized leg
+of ``tt_families``) → BENCH_tt_quant.json, ``serve_load`` →
 BENCH_serve_load.json.
 """
 
@@ -88,6 +93,14 @@ def bench_tt_serve(fast: bool = False):
 def bench_tt_families(fast: bool = False):
     from benchmarks import tt_serve
     tt_serve.run_families(fast=fast)
+    # the quantized family rides the coverage lane: one reduced config
+    # through int8 cores, gating agreement + leaf-byte reduction
+    tt_serve.run_quant(fast=fast)
+
+
+def bench_tt_quant(fast: bool = False):
+    from benchmarks import tt_serve
+    tt_serve.run_quant(fast=fast)
 
 
 def bench_decode_driver(fast: bool = False):
@@ -109,6 +122,7 @@ ALL = {
     "kernels": bench_kernels,
     "tt_serve": bench_tt_serve,
     "tt_families": bench_tt_families,
+    "tt_quant": bench_tt_quant,
     "decode_driver": bench_decode_driver,
     "serve_load": bench_serve_load,
 }

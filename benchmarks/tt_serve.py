@@ -98,6 +98,145 @@ def run(fast: bool = False, arch: str = "gemma3-1b", eps: float = 0.2,
     return result
 
 
+def _teacher_logits(model, params, prompts):
+    """Teacher-forced per-position logits: drive ``decode_step`` across the
+    prompt and stack every position's next-token logits -> (b, S-1, V).
+    This is the measured surface for the quantized agreement gate —
+    ``generate``'s ``prompt_logits`` is last-position only, which would
+    reduce the gate to a handful of samples."""
+    import jax.numpy as jnp
+    b, s = prompts.shape
+    cache = model.init_cache(b, s)
+    outs = []
+    for t in range(s - 1):
+        logits, cache = model.decode_step(
+            params, cache, jnp.asarray(prompts[:, t:t + 1]))
+        outs.append(np.asarray(logits, np.float32).reshape(b, -1))
+    return np.stack(outs, 1)
+
+
+def run_quant(fast: bool = False, arch: str = "gemma3-1b", eps: float = 0.2,
+              write_json: bool = True, min_agreement: float = 0.99,
+              agree_tol: float = 0.05,
+              min_vs_tt: float = 1.8, min_vs_dense: float = 3.9):
+    """Quantized TT serving gate: int8 cores + fused in-kernel dequant.
+
+    Serves the same payload three ways — reconstruct-then-serve (dense),
+    TT-native (wide cores), TT-native int8 — and gates on the quantized
+    contract:
+
+      * teacher-forced next-token agreement vs the dense oracle ≥ 99%,
+        measured over every prompt position (b×(S-1) positions via
+        ``_teacher_logits``, so the bound is measured, not vacuous).
+        Agreement is TIE-TOLERANT: a position agrees when the quantized
+        model's argmax matches the oracle token, or scores it within
+        ``agree_tol``·(logit scale) of its own argmax.  On synthetic
+        spectral-decay weights the predictive distribution is near-flat
+        (top-1/top-2 gaps ~1% of logit scale — random weights have nothing
+        to be confident about), so raw argmax between ANY two
+        numerically-differing implementations is tie-breaking noise there;
+        the tolerance is the same 5%-of-scale bound the wide-TT parity
+        gate uses, and a real quantization bug (wrong scale, overflow,
+        missing dequant) blows through it at once.  Raw argmax agreement
+        is recorded alongside.
+      * TT-served-leaf resident bytes (what the ``tt_contract`` kernels
+        stream — ``tt_leaf_bytes``) shrink ≥1.8x vs the wide (bf16) cores
+        and ≥3.9x vs the dense form of those same leaves.  Raw leaves
+        (embeddings, norms) are identical across all three modes; total
+        resident bytes are recorded alongside but not gated, since the raw
+        remainder dilutes the ratio without saying anything about the
+        quantization.
+    """
+    from repro.configs import get_config
+    from repro.core import (
+        CompressionPolicy, TTCompressor, spectral_decay_pytree,
+        tt_leaf_bytes, tt_param_bytes,
+    )
+    from repro.models import common as model_common
+    from repro.models.registry import build
+
+    # the agreement gate needs position count: b×(prompt_len-1) ≥ 252 keeps
+    # the measurement granularity (1/positions) well under the 1% bound
+    b, prompt_len, gen = (4, 64, 8) if fast else (4, 64, 32)
+    cfg = get_config(arch).reduced()
+    model = build(cfg)
+    params = spectral_decay_pytree(model.init(jax.random.PRNGKey(0)))
+    comp = TTCompressor(CompressionPolicy(eps=eps, min_size=8192))
+    payload, report = comp.compress(params)
+
+    params_rx = comp.decompress(payload)
+    params_tt = model_common.tt_native_params(payload, family=cfg.family)
+    params_q = model_common.tt_native_params(
+        payload, family=cfg.family, quant="int8"
+    )
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (b, prompt_len), np.int32)
+    max_len = prompt_len + gen
+
+    rows, tf = [], {}
+    for mode, p in (("dense", params_rx), ("tt", params_tt),
+                    ("tt-int8", params_q)):
+        dt, _ = _decode(model, p, prompts, gen, max_len)
+        tf[mode] = _teacher_logits(model, p, prompts)
+        rows.append((mode, b * (gen - 1) / max(dt, 1e-9), tt_param_bytes(p)))
+
+    lrx, lq = tf["dense"], tf["tt-int8"]
+    positions = lrx.shape[0] * lrx.shape[1]
+    scale = float(np.max(np.abs(lrx)))
+    oracle = np.argmax(lrx, -1)                       # (b, S-1)
+    raw_agree = float(np.mean(np.argmax(lq, -1) == oracle))
+    # tie-tolerant: the quantized model must score the oracle token within
+    # agree_tol*scale of its own argmax (0 deficit == raw argmax match)
+    deficit = np.max(lq, -1) - np.take_along_axis(
+        lq, oracle[..., None], -1)[..., 0]
+    agree = float(np.mean(deficit <= agree_tol * scale))
+    # the wide cores are held to a 5x tighter bound — only quantization is
+    # allowed to move logits materially (exact argmax would flip on
+    # rounding noise at the near-tied positions)
+    tt_deficit = np.max(tf["tt"], -1) - np.take_along_axis(
+        tf["tt"], oracle[..., None], -1)[..., 0]
+    tt_agree = float(np.mean(tt_deficit <= 0.2 * agree_tol * scale))
+    wide_leaf, dense_leaf = tt_leaf_bytes(params_tt)
+    q_leaf, _ = tt_leaf_bytes(params_q)
+
+    print(f"\nTT-quant ({arch} reduced, ε={eps}, int8 cores, batch={b}, "
+          f"gen={gen})")
+    print(f"{'mode':<12}{'tok/s':>10}{'total bytes':>14}")
+    for mode, tps, bytes_ in rows:
+        print(f"{mode:<12}{tps:>10.1f}{bytes_:>14,}")
+    print(f"TT-served leaves: bf16-TT {wide_leaf:,} -> int8 {q_leaf:,} "
+          f"({wide_leaf / q_leaf:.2f}x; vs dense form "
+          f"{dense_leaf / q_leaf:.2f}x)")
+    print(f"next-token agreement vs dense oracle: {agree:.2%} "
+          f"(tie-tolerant, tol {agree_tol:.0%} of logit scale; raw argmax "
+          f"{raw_agree:.2%}) over {positions} teacher-forced positions")
+
+    assert tt_agree == 1.0, ("wide-TT logits drifted from dense", tt_agree)
+    assert agree >= min_agreement, (agree, min_agreement)
+    assert wide_leaf / q_leaf >= min_vs_tt, (wide_leaf, q_leaf, min_vs_tt)
+    assert dense_leaf / q_leaf >= min_vs_dense, (
+        dense_leaf, q_leaf, min_vs_dense)
+
+    result = {
+        "arch": arch, "agreement": agree, "raw_argmax_agreement": raw_agree,
+        "agree_tol_frac": agree_tol,
+        "positions": positions,
+        "tt_leaf_bytes": wide_leaf, "tt_int8_leaf_bytes": q_leaf,
+        "dense_leaf_bytes": dense_leaf,
+        "leaf_reduction_vs_tt": wide_leaf / q_leaf,
+        "leaf_reduction_vs_dense": dense_leaf / q_leaf,
+        "modes": {
+            mode: {"tok_per_s": tps, "total_bytes": bytes_}
+            for mode, tps, bytes_ in rows
+        },
+    }
+    if write_json:
+        from benchmarks.record import write_bench
+        write_bench("tt_quant", result)
+    return result
+
+
 # one reduced config per architecture family: transformer (dense), encdec,
 # ssm (mamba2), hybrid (rglru), and MoE expert banks
 FAMILY_ARCHS = (
@@ -133,5 +272,7 @@ if __name__ == "__main__":
     import sys
     if "--families" in sys.argv:
         run_families(fast="--fast" in sys.argv)
+    elif "--quant" in sys.argv:
+        run_quant(fast="--fast" in sys.argv)
     else:
         run(fast="--fast" in sys.argv)

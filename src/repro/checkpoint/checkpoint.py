@@ -62,13 +62,27 @@ def _key_str(k) -> str:
 #     _COMMITTED        — atomic commit marker
 
 def save_tt_payload(directory: str, payload, extra: Optional[Dict] = None,
-                    family: Optional[str] = None) -> str:
+                    family: Optional[str] = None,
+                    quant: Optional[str] = None,
+                    quant_calib: str = "absmax") -> str:
     """Serialize a TTCompressor payload (CompressedParam pytree).
 
     family: the model family (``cfg.family``) the payload was compressed
     from, recorded in the manifest so a TT-native restore can select the
-    right serving-rule set (and refuse a payload from the wrong arch)."""
+    right serving-rule set (and refuse a payload from the wrong arch).
+
+    quant: integer storage format (``"int8"``) or None.  When set, TT cores
+    are written symmetrically quantized (one scale per core, stored beside
+    it as ``<key>__core<k>__scale``) — the on-disk payload shrinks ~4x on
+    the cores.  ``load_tt_payload`` dequantizes back to the wide core dtype;
+    the restored values sit exactly on the quantization grid, so a serving-
+    side requantization (``tt_native_params(quant=...)`` with absmax
+    calibration) reproduces the integer values and scales bit-identically —
+    the round-trip is lossless relative to the quantized form."""
     from repro.core.compression import CompressedParam
+    from repro.core import tt_linear as _ttl
+
+    qdt = None if quant is None else _ttl.quant_dtype(quant)
 
     def is_cp(x):
         return isinstance(x, CompressedParam)
@@ -95,10 +109,21 @@ def save_tt_payload(directory: str, payload, extra: Optional[Dict] = None,
                 "eps": float(c.tt.eps),
                 "core_dtypes": [str(g.dtype) for g in c.tt.cores],
             }
-            for k, g in enumerate(c.tt.cores):
-                arrays[f"{key}__core{k}"] = np.asarray(
-                    jax.device_get(g), np.float32
-                )
+            if qdt is not None:
+                meta["tt"]["quant"] = {"dtype": quant, "calib": quant_calib}
+                for k, g in enumerate(c.tt.cores):
+                    q, s = _ttl.quantize_array(
+                        jax.numpy.asarray(g), dtype=qdt, calib=quant_calib
+                    )
+                    arrays[f"{key}__core{k}"] = np.asarray(jax.device_get(q))
+                    arrays[f"{key}__core{k}__scale"] = np.asarray(
+                        jax.device_get(s), np.float32
+                    )
+            else:
+                for k, g in enumerate(c.tt.cores):
+                    arrays[f"{key}__core{k}"] = np.asarray(
+                        jax.device_get(g), np.float32
+                    )
         else:
             # raw leaves round-trip through f32 (np lacks bf16/fp8 writers)
             arrays[f"{key}__raw"] = np.asarray(
@@ -113,7 +138,7 @@ def save_tt_payload(directory: str, payload, extra: Optional[Dict] = None,
     os.makedirs(tmp, exist_ok=True)
     np.savez(os.path.join(tmp, "tt_payload.npz"), **arrays)
     manifest = {"time": time.time(), "leaves": leaves, "extra": extra or {},
-                "family": family}
+                "family": family, "quant": quant}
     with open(os.path.join(tmp, "tt_manifest.json"), "w") as f:
         json.dump(manifest, f)
     with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
@@ -163,10 +188,18 @@ def load_tt_payload(directory: str, like) -> Tuple[Any, Dict]:
         dtype = jnp.dtype(m["orig_dtype"])
         crop = tuple(m["crop_dims"]) if m.get("crop_dims") else None
         if m["kind"] == "tt":
-            cores = [
-                jnp.asarray(data[f"{key}__core{k}"], jnp.dtype(cd))
-                for k, cd in enumerate(m["tt"]["core_dtypes"])
-            ]
+            quant = m["tt"].get("quant")
+            cores = []
+            for k, cd in enumerate(m["tt"]["core_dtypes"]):
+                arr = data[f"{key}__core{k}"]
+                if quant is not None:
+                    # dequantize to the wide core dtype: restored values sit
+                    # exactly on the integer grid, so requantizing at serve
+                    # time (absmax) is bit-identical to what was saved
+                    arr = (np.asarray(arr, np.float32)
+                           * np.asarray(data[f"{key}__core{k}__scale"],
+                                        np.float32))
+                cores.append(jnp.asarray(arr, jnp.dtype(cd)))
             tt = TTTensor(
                 cores=cores, shape=tuple(m["tt"]["shape"]),
                 ranks=tuple(m["tt"]["ranks"]), eps=m["tt"]["eps"],

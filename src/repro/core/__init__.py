@@ -64,11 +64,18 @@ from repro.core.compression import (
 )
 from repro.core.tt_linear import (
     TTLinear,
+    dequantize_array,
+    dequantize_tt,
     is_tt_linear,
+    quant_dtype,
+    quantize_array,
+    quantize_tt,
+    quantize_tt_tree,
     select_layer,
     spectral_decay_pytree,
     tt_apply,
     tt_apply_experts,
+    tt_leaf_bytes,
     tt_linear_from_tt,
     tt_param_bytes,
 )

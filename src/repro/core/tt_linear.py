@@ -11,6 +11,22 @@ and the storage/bandwidth-bound serving mode of the TT-LLM accelerator work
 latency, so shipping cores instead of dense weights is both the memory and
 the speed win.
 
+Quantized storage (int8, int4-ready)
+------------------------------------
+Decode is memory-bound, so the cores' *storage* bytes are the decode
+latency.  ``quantize_tt`` rounds every core to a symmetric integer grid —
+one scale per core (per-core absmax calibration), one scale per lead ROW
+(per layer, and per (layer, expert) for expert banks) — and the fused
+kernels dequantize *inside* the contraction: HBM streams int8, the MXU
+computes f32, and the scale multiply folds into the per-tile epilogue
+(``kernels/tt_contract`` q-variants).  The wide form of a stored core never
+exists outside a VMEM tile; the only wide intermediate is the per-layer
+lead-absorbed first core, which is transient activation-sized traffic (and
+``r_s``× smaller than the core it absorbs).  With round-to-nearest the
+absolute error per element is at most ``scale/2 = absmax/(2·qmax)`` —
+``≲ 0.2%`` of the core's dynamic range for int8 — which is an order of
+magnitude inside the TT truncation ε the payload already carries.
+
 Representation
 --------------
 A ``TTLinear`` wraps one (optionally layer-stacked) weight:
@@ -60,6 +76,15 @@ class TTLinear:
     dtype: Any = jnp.bfloat16        # activation dtype of the dense original
     experts: Optional[int] = None    # expert-bank size E (extra lead mode
                                      # kept as a batch axis at apply time)
+    scales: Optional[List[jax.Array]] = None   # per-core () f32 dequant
+                                     # scales (None = wide storage)
+    lead_scale: Optional[jax.Array] = None     # per-lead-row f32 scales:
+                                     # (L,) stacked / (L, E) experts / ()
+
+    @property
+    def quantized(self) -> bool:
+        """True when the cores are stored on an integer grid."""
+        return self.scales is not None
 
     @property
     def stacked(self) -> bool:
@@ -84,7 +109,7 @@ class TTLinear:
 
 def _ttl_flatten(t: TTLinear):
     return (
-        (t.lead, t.cores),
+        (t.lead, t.cores, t.scales, t.lead_scale),
         (t.split, t.in_shape, t.out_shape, jnp.dtype(t.dtype).name,
          t.experts),
     )
@@ -95,7 +120,7 @@ def _ttl_unflatten(aux, kids):
     return TTLinear(
         lead=kids[0], cores=kids[1], split=split,
         in_shape=in_shape, out_shape=out_shape, dtype=jnp.dtype(dtype),
-        experts=experts,
+        experts=experts, scales=kids[2], lead_scale=kids[3],
     )
 
 
@@ -120,8 +145,127 @@ def select_layer(t: TTLinear, idx) -> TTLinear:
     return TTLinear(
         lead=jnp.take(t.lead, idx, axis=0, mode="clip"), cores=t.cores,
         split=t.split, in_shape=t.in_shape, out_shape=t.out_shape,
-        dtype=t.dtype, experts=t.experts,
+        dtype=t.dtype, experts=t.experts, scales=t.scales,
+        lead_scale=(None if t.lead_scale is None
+                    else jnp.take(t.lead_scale, idx, axis=0, mode="clip")),
     )
+
+
+# ---------------------------------------------------------------------------
+# Quantization: symmetric integer cores, per-core / per-lead-row scales
+# ---------------------------------------------------------------------------
+
+# storage formats the serving stack accepts; int4 rides the same machinery
+# (qmax from jnp.iinfo) once a packed container lands in the checkpoint path
+QUANT_DTYPES = {"int8": jnp.int8}
+
+
+def quant_dtype(name: str):
+    """Resolve a ``--weights tt-<name>`` / ``quant=<name>`` storage format."""
+    try:
+        return QUANT_DTYPES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown quantized core format {name!r} "
+            f"(supported: {sorted(QUANT_DTYPES)})"
+        ) from None
+
+
+def _calib_amax(a: jax.Array, calib: str, axis=None) -> jax.Array:
+    """Calibration point of |a|: ``absmax`` (default) or ``pXX[.X]`` — the
+    XX-th percentile of |a|, clipping the tail outliers into saturation in
+    exchange for a finer grid on the bulk."""
+    mag = jnp.abs(a.astype(jnp.float32))
+    if calib == "absmax":
+        return mag.max(axis=axis)
+    if calib.startswith("p"):
+        try:
+            pct = float(calib[1:])
+        except ValueError:
+            pct = -1.0
+        if 0.0 < pct <= 100.0:
+            return jnp.percentile(mag, pct, axis=axis)
+    raise ValueError(
+        f"quant calibration must be 'absmax' or 'pXX' (percentile of |w|, "
+        f"0 < XX <= 100), got {calib!r}"
+    )
+
+
+def quantize_array(a: jax.Array, dtype=jnp.int8, calib: str = "absmax",
+                   axis=None) -> Tuple[jax.Array, jax.Array]:
+    """(values, scale) of a symmetric integer quantization of ``a``.
+
+    scale = amax/qmax per reduction group (whole array when ``axis`` is
+    None, else per row over ``axis``); values = clip(round(a/scale)).
+    All-zero groups pin scale to 1 so the round-trip stays exact.  With
+    absmax calibration the max-|a| element lands exactly on ±qmax, so
+    dequantize→requantize is idempotent (bit-identical values and scales) —
+    the property the int8 checkpoint round-trip leans on."""
+    qmax = jnp.iinfo(dtype).max
+    amax = _calib_amax(a, calib, axis=axis)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    s = scale if axis is None else jnp.expand_dims(scale, axis)
+    q = jnp.clip(jnp.round(a.astype(jnp.float32) / s), -qmax, qmax)
+    return q.astype(dtype), scale
+
+
+def dequantize_array(q: jax.Array, scale: jax.Array, axis=None) -> jax.Array:
+    """Inverse of ``quantize_array`` (f32 values; exact for the grid)."""
+    s = scale if axis is None else jnp.expand_dims(scale, axis)
+    return q.astype(jnp.float32) * s
+
+
+def quantize_tt(t: TTLinear, dtype=jnp.int8,
+                calib: str = "absmax") -> TTLinear:
+    """Quantize a TTLinear's resident payload to symmetric integers.
+
+    Each core gets ONE scale (per-core absmax — cores are the shared
+    compressed payload, already balanced by the TT-SVD's norm split); the
+    lead table gets one scale PER ROW over its rank axis (per layer, and
+    per (layer, expert) for expert banks) because row magnitudes vary with
+    layer depth.  Max absolute error per element is scale/2 =
+    amax/(2·qmax): <= amax/254 for int8.  Apply-time dequantization stays
+    inside the fused kernels (``tt_apply`` hands int8 cores + scales down
+    to ``kernels/tt_contract``)."""
+    assert not t.quantized, "TTLinear is already quantized"
+    cores, scales = [], []
+    for g in t.cores:
+        q, s = quantize_array(g, dtype=dtype, calib=calib)
+        cores.append(q)
+        scales.append(s)
+    lead, lead_scale = t.lead, None
+    if lead is not None:
+        lead, lead_scale = quantize_array(lead, dtype=dtype, calib=calib,
+                                          axis=-1)
+    return TTLinear(
+        lead=lead, cores=cores, split=t.split, in_shape=t.in_shape,
+        out_shape=t.out_shape, dtype=t.dtype, experts=t.experts,
+        scales=scales, lead_scale=lead_scale,
+    )
+
+
+def dequantize_tt(t: TTLinear) -> TTLinear:
+    """Back to wide (f32) storage — the parity oracle for the fused path."""
+    assert t.quantized, "TTLinear is not quantized"
+    cores = [dequantize_array(g, s) for g, s in zip(t.cores, t.scales)]
+    lead = t.lead
+    if lead is not None:
+        lead = dequantize_array(lead, t.lead_scale, axis=-1)
+    return TTLinear(
+        lead=lead, cores=cores, split=t.split, in_shape=t.in_shape,
+        out_shape=t.out_shape, dtype=t.dtype, experts=t.experts,
+    )
+
+
+def quantize_tt_tree(params, dtype=jnp.int8, calib: str = "absmax"):
+    """Quantize every TTLinear leaf of a params pytree (raw leaves pass
+    through untouched) — the one-call seam serve.py and the benchmarks use
+    to turn a bf16-TT serving tree into the int8 one."""
+    def one(leaf):
+        if is_tt_linear(leaf) and not leaf.quantized:
+            return quantize_tt(leaf, dtype=dtype, calib=calib)
+        return leaf
+    return jax.tree.map(one, params, is_leaf=is_tt_linear)
 
 
 def tt_apply(x: jax.Array, t: TTLinear) -> jax.Array:
@@ -136,17 +280,27 @@ def tt_apply(x: jax.Array, t: TTLinear) -> jax.Array:
     x2 = x.reshape(int(np.prod(batch or (1,))), -1)
 
     g0 = t.cores[0]                                   # (r_s, n_1, r_1)
-    if t.lead is not None:
+    lead = t.lead
+    if lead is not None and t.quantized:
+        # the lead row is tiny — dequantize it host-side; its scale and the
+        # first core's scale fold into the (transient) absorbed core, so
+        # the tail cores are the only wide-dequant work left for the kernel
+        lead = dequantize_array(lead, t.lead_scale)
+    if lead is not None:
         g0 = jnp.einsum(
-            "r,rns->ns", t.lead.astype(jnp.float32), g0.astype(jnp.float32)
+            "r,rns->ns", lead.astype(jnp.float32), g0.astype(jnp.float32)
         )
     else:
         assert g0.shape[0] == 1, g0.shape
-        g0 = g0[0]
+        g0 = g0[0].astype(jnp.float32)
+    chain_scales = None
+    if t.quantized:
+        g0 = g0 * t.scales[0]
+        chain_scales = [None] + list(t.scales[1:])    # tail stays int8
     chain = [g0] + list(t.cores[1:])
 
     from repro.kernels.tt_contract.ops import tt_contract  # lazy: no cycle
-    y2 = tt_contract(x2, chain, split=t.split)
+    y2 = tt_contract(x2, chain, split=t.split, scales=chain_scales)
     return y2.reshape(*batch, *t.out_shape).astype(x.dtype)
 
 
@@ -169,12 +323,20 @@ def tt_apply_experts(x: jax.Array, t: TTLinear) -> jax.Array:
     x3 = x.reshape(e, int(np.prod(batch or (1,))), -1)
 
     # per-expert lead-absorbed first core: (E, r_s)·(r_s, n_1, r_1)
+    lead = t.lead
+    tail_scales = None
+    if t.quantized:
+        lead = dequantize_array(lead, t.lead_scale, axis=-1)  # (E, r_s)
+        tail_scales = list(t.scales[1:])
     g0e = jnp.einsum(
-        "er,rns->ens", t.lead.astype(jnp.float32),
+        "er,rns->ens", lead.astype(jnp.float32),
         t.cores[0].astype(jnp.float32),
     )
+    if t.quantized:
+        g0e = g0e * t.scales[0]
     from repro.kernels.tt_contract.ops import tt_contract_batched
-    y3 = tt_contract_batched(x3, g0e, list(t.cores[1:]), split=t.split)
+    y3 = tt_contract_batched(x3, g0e, list(t.cores[1:]), split=t.split,
+                             scales=tail_scales)
     return y3.reshape(e, *batch, *t.out_shape).astype(x.dtype)
 
 
@@ -264,18 +426,44 @@ def tt_linear_from_tt(
 
 def tt_param_bytes(tree) -> int:
     """Resident weight bytes of a params pytree: TT leaves count their
-    cores+lead payload, dense leaves their full array.  Non-array leaves
-    (Python step counters and other scalars riding in checkpoint trees)
-    carry no resident weight bytes and are skipped."""
+    FULL payload — cores, lead table, and (when quantized) every dequant
+    scale array — dense leaves their full array.  The TT-leaf walk goes
+    through ``jax.tree.leaves`` of the leaf itself, so a field added to the
+    TTLinear pytree can never silently escape the accounting again (the
+    quantization scales initially did).  Non-array leaves (Python step
+    counters and other scalars riding in checkpoint trees) carry no
+    resident weight bytes and are skipped."""
     total = 0
     for leaf in jax.tree.leaves(tree, is_leaf=is_tt_linear):
         if is_tt_linear(leaf):
-            total += sum(int(c.size) * c.dtype.itemsize for c in leaf.cores)
-            if leaf.lead is not None:
-                total += int(leaf.lead.size) * leaf.lead.dtype.itemsize
+            for a in jax.tree.leaves(
+                (leaf.lead, leaf.cores, leaf.scales, leaf.lead_scale)
+            ):
+                total += int(a.size) * a.dtype.itemsize
         elif hasattr(leaf, "size") and hasattr(leaf, "dtype"):
             total += int(leaf.size) * leaf.dtype.itemsize
     return total
+
+
+def tt_leaf_bytes(tree) -> Tuple[int, int]:
+    """(resident bytes of the TT-served leaves, dense bytes those leaves
+    would occupy un-decomposed) — the byte pair the quantization roofline
+    argument is about: what the ``tt_contract`` kernels actually stream
+    vs the reconstruct-then-serve baseline.  Raw leaves (embeddings,
+    norms) are identical between the serving modes and excluded from both
+    sides."""
+    tt_b, dense_b = 0, 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_tt_linear):
+        if not is_tt_linear(leaf):
+            continue
+        for a in jax.tree.leaves(
+            (leaf.lead, leaf.cores, leaf.scales, leaf.lead_scale)
+        ):
+            tt_b += int(a.size) * a.dtype.itemsize
+        n = int(np.prod(leaf.in_shape)) * int(np.prod(leaf.out_shape))
+        n *= (leaf.num_layers or 1) * (leaf.experts or 1)
+        dense_b += n * jnp.dtype(leaf.dtype).itemsize
+    return tt_b, dense_b
 
 
 def spectral_decay_pytree(params, alpha: float = 1.0, min_size: int = 8192):

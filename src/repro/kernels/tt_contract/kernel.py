@@ -19,6 +19,14 @@ attention weights are 3-core chains):
 Cores sit whole in VMEM (they are the *compressed* payload — KBs); the
 grid tiles the token dimension.  Deeper chains fall back to the jnp oracle
 (``ref.py``) in ``ops.py``.
+
+Quantized variants (``tt_contract_2q``/``tt_contract_3q``) take the tail
+cores in their integer STORAGE dtype — int8 rides HBM→VMEM at one byte per
+element, the cast to f32 happens on the VMEM tile inside the kernel body,
+and the symmetric dequant scales (one scalar per core; the chain is linear
+in each core, so they commute out) fold into a single multiply on the
+output tile.  The wide form of a stored core never exists outside VMEM —
+that is the whole point: decode streams int8, the MXU computes f32.
 """
 
 from __future__ import annotations
@@ -67,6 +75,44 @@ def _tt3_kernel(x_ref, g0_ref, g1_ref, g2_ref, o_ref, *, split, n_mid, bb):
         t = t.reshape(bb, n_mid * g0.shape[1])
         t = _dot(t, g1)                                   # (bb, r2)
         o_ref[...] = _dot(t, g2)                          # (bb, n3)
+
+
+def _tt2q_kernel(x_ref, g0_ref, g1_ref, s_ref, o_ref):
+    """Dequant-fused 2-core body: g1 arrives in its storage dtype (int8) and
+    widens on the VMEM tile; the symmetric scale rides in as a (1, 1) f32
+    operand and folds into the output tile."""
+    x = x_ref[...].astype(jnp.float32)
+    t = _dot(x, g0_ref[...].astype(jnp.float32))          # (bb, r1)
+    y = _dot(t, g1_ref[...].astype(jnp.float32))          # (bb, n2)
+    o_ref[...] = y * s_ref[0, 0]
+
+
+def _tt3q_kernel(x_ref, g0_ref, g1_ref, g2_ref, s_ref, o_ref,
+                 *, split, n_mid, bb):
+    """Dequant-fused 3-core body: same dataflow as ``_tt3_kernel`` but the
+    tail cores (g1, g2) stay in storage dtype until the in-VMEM cast, and
+    the combined per-core scale product lands as one multiply at the end —
+    valid because the chain is linear in each core."""
+    x = x_ref[...].astype(jnp.float32)
+    g0 = g0_ref[...].astype(jnp.float32)
+    g1 = g1_ref[...].astype(jnp.float32)
+    g2 = g2_ref[...].astype(jnp.float32)
+    s = s_ref[0, 0]
+    if split == 1:
+        t = _dot(x, g0)                                   # (bb, r1)
+        t = _dot(t, g1)                                   # (bb, n2*r2)
+        r2 = g2.shape[0]
+        t = t.reshape(bb * n_mid, r2)
+        y = _dot(t, g2)                                   # (bb*n2, n3)
+        o_ref[...] = y.reshape(bb, n_mid * g2.shape[1]) * s
+    else:
+        n1 = g0.shape[0]
+        x3 = x.reshape(bb, n1, n_mid)
+        x3 = x3.transpose(0, 2, 1).reshape(bb * n_mid, n1)
+        t = _dot(x3, g0)                                  # (bb*n2, r1)
+        t = t.reshape(bb, n_mid * g0.shape[1])
+        t = _dot(t, g1)                                   # (bb, r2)
+        o_ref[...] = _dot(t, g2) * s                      # (bb, n3)
 
 
 DEFAULT_TILE_CAP = 512
@@ -138,3 +184,58 @@ def tt_contract_3(x, g0, g1, g2, *, split: int, n_mid: int, n_out: int,
         g1.astype(jnp.float32),
         g2.astype(jnp.float32),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_cap"))
+def tt_contract_2q(x, g0, g1, scale, interpret: bool = False,
+                   tile_cap: int = DEFAULT_TILE_CAP):
+    """Quantized 2-core chain: g1 passes through in storage dtype (int8) —
+    one byte per element over HBM→VMEM — and ``scale`` (its symmetric
+    dequant scale) folds into the output tile.  g0 is the lead-absorbed
+    first core, already wide with its scale folded host-side."""
+    b, n1 = x.shape
+    n2 = g1.shape[1]
+    bb = _grid_1d(b, tile_cap)
+    return pl.pallas_call(
+        _tt2q_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, n1), lambda i: (i, 0)),
+            pl.BlockSpec(g0.shape, lambda i: (0, 0)),
+            pl.BlockSpec(g1.shape, lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n2), jnp.float32),
+        interpret=interpret,
+    )(x, g0.astype(jnp.float32), g1,
+      jnp.asarray(scale, jnp.float32).reshape(1, 1))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("split", "n_mid", "n_out", "interpret", "tile_cap"),
+)
+def tt_contract_3q(x, g0, g1, g2, scale, *, split: int, n_mid: int,
+                   n_out: int, interpret: bool = False,
+                   tile_cap: int = DEFAULT_TILE_CAP):
+    """Quantized 3-core chain: tail cores (g1, g2) pass through in storage
+    dtype, ``scale`` is the product of their dequant scales."""
+    b, n_in = x.shape
+    bb = _grid_1d(b, tile_cap)
+    kern = functools.partial(_tt3q_kernel, split=split, n_mid=n_mid, bb=bb)
+    return pl.pallas_call(
+        kern,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, n_in), lambda i: (i, 0)),
+            pl.BlockSpec(g0.shape, lambda i: (0, 0)),
+            pl.BlockSpec(g1.shape, lambda i: (0, 0)),
+            pl.BlockSpec(g2.shape, lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_out), jnp.float32),
+        interpret=interpret,
+    )(x, g0.astype(jnp.float32), g1, g2,
+      jnp.asarray(scale, jnp.float32).reshape(1, 1))

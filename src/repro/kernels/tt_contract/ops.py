@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.kernels import common
 from repro.kernels.tt_contract import kernel as _kernel
 from repro.kernels.tt_contract.ref import (
-    tt_contract_batched_ref, tt_contract_ref, tt_dense_ref,
+    tt_contract_batched_ref, tt_contract_ref, tt_dense_ref, tt_dequant_chain,
 )
 
 
@@ -68,13 +68,31 @@ def _validated_cap(value, source: str) -> int:
     return cap
 
 
+def _core_tile_bytes(g) -> int:
+    """VMEM bytes a resident core tile occupies.  Integer cores pass into
+    the kernels in their storage dtype (the fused dequant widens them only
+    as compute values, never as a resident tile), so they cost itemsize
+    bytes; float cores are pre-cast to f32 at the entry point, so their
+    resident cost is 4 bytes regardless of the caller-side dtype."""
+    if jnp.issubdtype(jnp.dtype(g.dtype), jnp.integer):
+        return int(g.size) * jnp.dtype(g.dtype).itemsize
+    return int(g.size) * 4
+
+
 def _fits_vmem(x2, cores, n_out: int, split: int,
                tile_cap: int = _kernel.DEFAULT_TILE_CAP) -> bool:
-    """f32 bytes of one grid step at the tile _grid_1d will actually pick:
+    """Bytes of one grid step at the tile _grid_1d will actually pick:
     activation tile in + out, cores fully resident, PLUS the largest
     intermediate the fused body materializes — the depth-3 expand path's
     ``(bb, n_mid·r2)`` tile can dwarf both activation tiles and used to be
-    unaccounted, letting oversized chains onto the fused path."""
+    unaccounted, letting oversized chains onto the fused path.
+
+    Activation tiles and intermediates are always f32 (4 bytes); cores are
+    accounted at their per-element itemsize — an int8 core tile is a
+    quarter the f32 footprint, and assuming uniform 4-byte elements here
+    would wrongly bounce near-budget quantized chains off the fused path
+    (and, symmetrically, would under-gate if wide intermediates were ever
+    accounted at a narrow itemsize)."""
     bb = _kernel._grid_1d(x2.shape[0], tile_cap)
     n_in = x2.shape[1]
     if len(cores) == 2:
@@ -91,9 +109,24 @@ def _fits_vmem(x2, cores, n_out: int, split: int,
             # transposed x copy (bb·n_mid, n1) + partial (bb·n_mid, r1)
             # + contracted (bb, r2)
             interm = bb * (n_in + n_mid * r1 + r2)
-    ops_bytes = 4 * (bb * (n_in + n_out) + interm
-                     + sum(int(g.size) for g in cores))
+    ops_bytes = (4 * (bb * (n_in + n_out) + interm)
+                 + sum(_core_tile_bytes(g) for g in cores))
     return ops_bytes < common.VMEM_BUDGET // 2
+
+
+def _combined_scale(scales) -> Optional[jax.Array]:
+    """Product of the non-``None`` per-core dequant scales, or ``None`` when
+    the chain is unquantized.  The TT chain is linear in every core, so the
+    per-core symmetric scales commute out to one output multiply."""
+    if scales is None:
+        return None
+    combined = None
+    for s in scales:
+        if s is None:
+            continue
+        s = jnp.asarray(s, jnp.float32)
+        combined = s if combined is None else combined * s
+    return combined
 
 
 def tt_contract(
@@ -102,12 +135,20 @@ def tt_contract(
     split: int,
     interpret: bool | None = None,
     tile: Optional[int] = None,     # token-dim tile cap override
+    scales: Optional[Sequence[Optional[jax.Array]]] = None,
 ) -> jax.Array:                     # (B, N_out) float32
-    """Contract activations straight through TT cores (no dense weight)."""
+    """Contract activations straight through TT cores (no dense weight).
+
+    ``scales`` (aligned with ``cores``, ``None`` entries = already-wide
+    cores) selects the dequant-fused kernels: integer cores ride into the
+    kernel in storage dtype and the scale product folds into the output
+    tile.  The unfused fallback dequantizes via the same linearity —
+    ``tt_contract_ref(x, cores) * ∏scales``."""
     if interpret is None:
         interpret = common.use_interpret()
     depth = len(cores)
     x2 = x2.astype(jnp.float32)
+    combined = _combined_scale(scales)
     n_out = 1
     for g in cores[split:]:
         n_out *= g.shape[1]
@@ -120,9 +161,13 @@ def tt_contract(
 
     if depth == 2 and split == 1 and cap is not None:
         g0, g1 = cores
+        g1m = g1[:, :, 0] if g1.ndim == 3 else g1
+        if combined is not None:
+            return _kernel.tt_contract_2q(
+                x2, g0, g1m, combined, interpret=interpret, tile_cap=cap,
+            )
         return _kernel.tt_contract_2(
-            x2, g0, g1[:, :, 0] if g1.ndim == 3 else g1, interpret=interpret,
-            tile_cap=cap,
+            x2, g0, g1m, interpret=interpret, tile_cap=cap,
         )
 
     if depth == 3 and split in (1, 2) and cap is not None:
@@ -131,18 +176,30 @@ def tt_contract(
         if split == 1:
             r1, n2, r2 = g1.shape
             g1f = g1.reshape(r1, n2 * r2)
+            if combined is not None:
+                return _kernel.tt_contract_3q(
+                    x2, g0, g1f, g2m, combined, split=1, n_mid=n2,
+                    n_out=n2 * g2m.shape[1], interpret=interpret,
+                    tile_cap=cap,
+                )
             return _kernel.tt_contract_3(
                 x2, g0, g1f, g2m, split=1, n_mid=n2,
                 n_out=n2 * g2m.shape[1], interpret=interpret, tile_cap=cap,
             )
         r1, n2, r2 = g1.shape
         g1p = g1.transpose(1, 0, 2).reshape(n2 * r1, r2)   # (n2·r1, r2)
+        if combined is not None:
+            return _kernel.tt_contract_3q(
+                x2, g0, g1p, g2m, combined, split=2, n_mid=n2,
+                n_out=g2m.shape[1], interpret=interpret, tile_cap=cap,
+            )
         return _kernel.tt_contract_3(
             x2, g0, g1p, g2m, split=2, n_mid=n2,
             n_out=g2m.shape[1], interpret=interpret, tile_cap=cap,
         )
 
-    return tt_contract_ref(x2, cores, split)
+    y = tt_contract_ref(x2, cores, split)
+    return y if combined is None else y * combined
 
 
 def tt_contract_batched(
@@ -152,6 +209,7 @@ def tt_contract_batched(
     split: int,
     interpret: bool | None = None,
     tile: Optional[int] = None,
+    scales: Optional[Sequence[Optional[jax.Array]]] = None,
 ) -> jax.Array:                     # (E, B, N_out) float32
     """Expert-batched TT chain: the whole bank in one launch.
 
@@ -159,15 +217,22 @@ def tt_contract_batched(
     differs — so vmapping the fused dispatch over the expert axis gives the
     Pallas kernels an extra grid dimension (one launch, E×(B/bb) grid steps)
     while oversized chains still take the per-expert einsum fallback.  The
-    VMEM gate applies per grid step, which is exactly the per-expert tile."""
+    VMEM gate applies per grid step, which is exactly the per-expert tile.
+
+    ``scales`` aligns with the shared tail ``cores`` (the per-expert lead is
+    handed in wide, its per-row scales folded by the caller), so the scale
+    product is expert-invariant and closes over the vmap unbatched."""
     rest = list(cores)
+    chain_scales = None if scales is None else [None] + list(scales)
     return jax.vmap(
         lambda x2, g0: tt_contract(x2, [g0] + rest, split,
-                                   interpret=interpret, tile=tile)
+                                   interpret=interpret, tile=tile,
+                                   scales=chain_scales)
     )(x3, g0b)
 
 
 __all__ = [
     "resolve_tile_cap", "tt_contract", "tt_contract_batched",
     "tt_contract_batched_ref", "tt_contract_ref", "tt_dense_ref",
+    "tt_dequant_chain",
 ]

@@ -71,6 +71,26 @@ def tt_contract_batched_ref(
     return t.reshape(e, b, -1)
 
 
+def tt_dequant_chain(
+    cores: Sequence[jax.Array],
+    scales: Sequence[jax.Array | None],
+) -> list[jax.Array]:
+    """Explicitly dequantize a chain: each core widened to f32 and multiplied
+    by its symmetric scale (``None`` = core is already wide — e.g. the
+    lead-absorbed first core whose scale was folded host-side).  This is the
+    unfused oracle the scale-folded kernels must match at f32 tolerance: the
+    chain is linear in every core, so scaling cores individually and scaling
+    the output once by the product are the same map."""
+    assert len(cores) == len(scales), (len(cores), len(scales))
+    out = []
+    for g, s in zip(cores, scales):
+        g = jnp.asarray(g, jnp.float32)
+        if s is not None:
+            g = g * jnp.asarray(s, jnp.float32)
+        out.append(g)
+    return out
+
+
 def tt_dense_ref(cores: Sequence[jax.Array], split: int) -> jax.Array:
     """Materialize the chain into the dense (N_in, N_out) matrix —
     the reconstruct-then-matmul baseline the fused path must match."""

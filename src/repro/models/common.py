@@ -112,7 +112,10 @@ def dense_apply(x: jax.Array, w, in_ndim: int = 1) -> jax.Array:
     bf16 gate weight computes in fp32 and a high-precision weight is never
     silently downcast).  TTLinear ``w``: contracts the activation straight
     through the TT cores via the fused ``kernels/tt_contract`` chain — the
-    full dense matrix is never materialized.
+    full dense matrix is never materialized.  Quantized TTLinear leaves
+    (int8 cores + scales) take the same branch: ``tt_apply`` hands the
+    storage-dtype cores and their scales to the dequant-fused kernels, so
+    every family serves from int8 with zero model-code changes.
     """
     from repro.core import tt_linear as _ttl
     if _ttl.is_tt_linear(w):
@@ -132,7 +135,9 @@ def expert_apply(x: jax.Array, w) -> jax.Array:
     """Expert-banked weight application: x (E, C, IN) against w (E, IN, OUT)
     — the MoE FFN's batched matmul.  Raw banks lower to the einsum they
     replace; an expert-axis TTLinear contracts the whole bank straight from
-    cores via the expert-batched TT chain (``tt_apply_experts``)."""
+    cores via the expert-batched TT chain (``tt_apply_experts``) —
+    quantized banks included (per-(layer, expert)-row lead scales, shared
+    int8 tail cores dequantized inside the batched kernel)."""
     from repro.core import tt_linear as _ttl
     if _ttl.is_tt_linear(w):
         return _ttl.tt_apply_experts(x, w)
@@ -681,7 +686,9 @@ def _path_str(path) -> str:
     return ".".join(parts)
 
 
-def tt_native_params(compressed, core_dtype=None, family: Optional[str] = None):
+def tt_native_params(compressed, core_dtype=None, family: Optional[str] = None,
+                     quant: Optional[str] = None,
+                     quant_calib: str = "absmax"):
     """TTCompressor payload → TT-native serving params.
 
     Layer-stacked matmul weights whose TT payload maps cleanly onto the
@@ -704,11 +711,21 @@ def tt_native_params(compressed, core_dtype=None, family: Optional[str] = None):
     explicit dtype is never second-guessed, however it compares) stores
     each leaf's cores in its original weight dtype (bf16 for the zoo) —
     the same rounding reconstruct-then-serve applies to the dense matrix.
+
+    quant: integer storage format name (``"int8"``) or None.  When set,
+    every TTLinear leaf is symmetrically quantized (per-core scales,
+    per-row lead scales — ``core/tt_linear.quantize_tt``) after conversion;
+    the fused kernels dequantize in-VMEM at apply time, so the serving
+    contract (``decode_step``/``forward`` signatures, staggered == isolated
+    under continuous batching) is unchanged — only logits move within the
+    quantization error bound.  quant_calib: ``"absmax"`` (default) or
+    ``"pXX"`` percentile clipping, forwarded to the calibrator.
     """
     from repro.core import compression as _comp
     from repro.core import tt_linear as _ttl
 
     rules = tt_serve_rules(family)
+    qdt = None if quant is None else _ttl.quant_dtype(quant)
 
     def is_cp(x):
         return isinstance(x, _comp.CompressedParam)
@@ -734,6 +751,8 @@ def tt_native_params(compressed, core_dtype=None, family: Optional[str] = None):
                     break
         if leaf is None:
             leaf = _comp.decompress_param(c) if is_cp(c) else c
+        elif qdt is not None:
+            leaf = _ttl.quantize_tt(leaf, dtype=qdt, calib=quant_calib)
         leaves.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 

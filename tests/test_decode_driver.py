@@ -4,8 +4,9 @@ Three layers of guarantees:
 
   * the fused ``lax.scan`` driver is token-for-token identical to the
     python one-step-per-token loop — across every family in the zoo, with
-    dense AND TT-native weights (the scan changes WHERE the loop runs, not
-    what it computes);
+    dense AND TT-native weights, including int8-quantized cores with fused
+    in-kernel dequant (the scan changes WHERE the loop runs, not what it
+    computes);
   * the slot/length-masked decode contract is backwards compatible: a
     legacy scalar-``pos`` cache decodes identically to the per-slot one;
   * continuous batching is exact, not approximate: staggered requests with
@@ -49,8 +50,9 @@ def _model_and_params(arch, weights="dense"):
     params = spectral_decay_pytree(model.init(jax.random.PRNGKey(0)))
     comp = TTCompressor(CompressionPolicy(eps=0.2, min_size=8192))
     payload, _ = comp.compress(params)
-    return cfg, model, model_common.tt_native_params(payload,
-                                                     family=cfg.family)
+    quant = "int8" if weights == "tt-int8" else None
+    return cfg, model, model_common.tt_native_params(
+        payload, family=cfg.family, quant=quant)
 
 
 def _assert_drivers_agree(cfg, model, params, b=2, plen=4, gen=5):
@@ -82,6 +84,22 @@ def test_fused_matches_python_tt(arch):
     _assert_drivers_agree(*_model_and_params(arch, weights="tt"))
 
 
+def test_fused_matches_python_tt_int8():
+    """Quantized cores change the numbers, not the drivers: fused and
+    python loops must stay token-identical when every TT leaf is int8 with
+    in-kernel dequant (fast lane — one small dense transformer)."""
+    _assert_drivers_agree(*_model_and_params("qwen1.5-0.5b",
+                                             weights="tt-int8"))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["gemma3-1b", "olmoe-1b-7b"])
+def test_fused_matches_python_tt_int8_families(arch):
+    """Quantized parity on the two distinct serving paths: the lead-table
+    scan (gemma3) and the expert-batched chain (olmoe)."""
+    _assert_drivers_agree(*_model_and_params(arch, weights="tt-int8"))
+
+
 def test_scalar_pos_cache_still_decodes():
     """Legacy contract: a scalar-``pos`` cache (lockstep serving) decodes
     identically to the per-slot (B,) one at equal positions."""
@@ -103,8 +121,8 @@ def test_scalar_pos_cache_still_decodes():
 
 
 def _staggered_vs_isolated(arch, slots, reqs_spec, chunk_steps=3,
-                           temperature=0.0, top_k=None):
-    cfg, model, params = _model_and_params(arch)
+                           temperature=0.0, top_k=None, weights="dense"):
+    cfg, model, params = _model_and_params(arch, weights=weights)
     rng = np.random.default_rng(2)
     eng = Engine(model, params, slots=slots, max_len=24,
                  chunk_steps=chunk_steps, temperature=temperature,
@@ -141,6 +159,14 @@ REQS = [(5, 4), (3, 7), (9, 3), (2, 5), (6, 6)]
 def test_continuous_matches_isolated_transformer():
     """Staggered heterogeneous requests == isolated runs (token-exact)."""
     _staggered_vs_isolated("qwen1.5-0.5b", slots=2, reqs_spec=REQS)
+
+
+def test_continuous_matches_isolated_tt_int8():
+    """ISSUE 7 acceptance: staggered == isolated must hold with QUANTIZED
+    cores too — the engine and the isolated run share the same int8 params,
+    so per-tile dequant cannot depend on which slot/step a token lands in."""
+    _staggered_vs_isolated("qwen1.5-0.5b", slots=2, reqs_spec=REQS[:4],
+                           weights="tt-int8")
 
 
 def test_continuous_matches_isolated_sampled():

@@ -4,9 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import quantize_array
 from repro.kernels.tt_contract.ops import (
     tt_contract, tt_contract_batched, tt_contract_batched_ref,
-    tt_contract_ref, tt_dense_ref,
+    tt_contract_ref, tt_dense_ref, tt_dequant_chain,
 )
 
 
@@ -129,6 +130,120 @@ def test_tt_contract_batched_matches_ref_and_dense(rng, mode_dims, ranks,
         np.testing.assert_allclose(
             y[ei], np.asarray(x3[ei]) @ w, atol=1e-5 * scale
         )
+
+
+# ---------------------------------------------------------------------------
+# Quantized chains: int8 tail cores, dequantization fused into the kernels
+# ---------------------------------------------------------------------------
+
+def _quantize_tail(cores):
+    """TTLinear-style quantized chain: wide lead-absorbed first core (its
+    scale folded host-side), int8 tail cores + per-core scales."""
+    qcores, scales = [cores[0]], [None]
+    for g in cores[1:]:
+        q, s = quantize_array(g)
+        qcores.append(q)
+        scales.append(s)
+    return qcores, scales
+
+
+@pytest.mark.parametrize("mode_dims,ranks,split", CASES)
+def test_tt_contract_quantized_matches_dequant_ref(rng, mode_dims, ranks,
+                                                   split):
+    """Fused-dequant dispatch (scale folded into the output tile) == the
+    explicit dequantize-then-einsum oracle at f32 tolerance, across the
+    fused depths AND the deep-chain fallback (which applies the scale
+    product outside the ref chain)."""
+    cores = _mk_chain(rng, mode_dims, ranks)
+    qcores, scales = _quantize_tail(cores)
+    n_in = int(np.prod(mode_dims[:split]))
+    x = jnp.asarray(rng.standard_normal((12, n_in)), jnp.float32)
+    y = np.asarray(tt_contract(x, qcores, split, scales=scales))
+    y_ref = np.asarray(
+        tt_contract_ref(x, tt_dequant_chain(qcores, scales), split)
+    )
+    scale = max(np.abs(y_ref).max(), 1e-6)
+    np.testing.assert_allclose(y, y_ref, atol=1e-5 * scale)
+    # and the dequantized chain stays close to the unquantized one: int8
+    # symmetric rounding moves each core <= scale/2 per element
+    y_exact = np.asarray(tt_contract_ref(x, cores, split))
+    assert np.abs(y - y_exact).max() <= 0.05 * max(np.abs(y_exact).max(), 1.0)
+
+
+@pytest.mark.parametrize("mode_dims,ranks,split", BATCHED_CASES)
+def test_tt_contract_batched_quantized_vs_per_expert(rng, mode_dims, ranks,
+                                                     split):
+    """Quantized expert-batched chain == per-expert dequantize-then-contract
+    loop: experts share the int8 tail cores and their scales, so the scale
+    product is expert-invariant."""
+    e, b = 4, 6
+    g0b = jnp.asarray(
+        rng.standard_normal((e, mode_dims[0], ranks[0])), jnp.float32)
+    rest = _mk_chain(rng, mode_dims, ranks)[1:]
+    qrest, tail_scales = [], []
+    for g in rest:
+        q, s = quantize_array(g)
+        qrest.append(q)
+        tail_scales.append(s)
+    n_in = int(np.prod(mode_dims[:split]))
+    x3 = jnp.asarray(rng.standard_normal((e, b, n_in)), jnp.float32)
+
+    y = np.asarray(
+        tt_contract_batched(x3, g0b, qrest, split, scales=tail_scales)
+    )
+    for ei in range(e):
+        chain = tt_dequant_chain([g0b[ei]] + qrest, [None] + tail_scales)
+        y_ref = np.asarray(tt_contract_ref(x3[ei], chain, split))
+        np.testing.assert_allclose(
+            y[ei], y_ref, atol=1e-5 * max(np.abs(y_ref).max(), 1e-6)
+        )
+
+
+def test_fits_vmem_accounts_core_itemsize(rng, monkeypatch):
+    """Regression: the VMEM gate assumed 4 bytes per core element.  An int8
+    chain near the budget occupies a quarter of that — the old accounting
+    would bounce it off the fused path it actually fits on.  Craft a budget
+    between the int8 and the (hypothetical) uniform-f32 footprint: the
+    quantized chain must pass the gate and dispatch fused, the wide chain
+    must fail it."""
+    from repro.kernels import common as kcommon
+    from repro.kernels.tt_contract import kernel as kernel_mod
+    from repro.kernels.tt_contract import ops
+
+    cores = _mk_chain(rng, [64, 128], [16])        # tail core 16*128 elements
+    qcores, scales = _quantize_tail(cores)
+    x = jnp.asarray(rng.standard_normal((32, 64)), jnp.float32)
+    bb = kernel_mod._grid_1d(32)
+    n_out = 128
+    acts = 4 * (bb * (64 + n_out) + bb * 16)       # tiles + (bb, r1) interm
+    wide_cores = 4 * sum(int(g.size) for g in cores)
+    int8_cores = sum(
+        int(g.size) * (1 if g.dtype == jnp.int8 else 4) for g in qcores
+    )
+    # budget straddles the two accountings of the SAME chain
+    budget = 2 * (acts + (int8_cores + wide_cores) // 2)
+    assert acts + int8_cores < budget // 2 < acts + wide_cores
+    monkeypatch.setattr(kcommon, "VMEM_BUDGET", budget)
+
+    assert ops._fits_vmem(x, qcores, n_out, split=1)
+    assert not ops._fits_vmem(x, cores, n_out, split=1)
+
+    used = {}
+    real = kernel_mod.tt_contract_2q
+
+    def spy(*args, **kw):
+        used["fused"] = True
+        return real(*args, **kw)
+
+    monkeypatch.setattr(kernel_mod, "tt_contract_2q", spy)
+    y = np.asarray(ops.tt_contract(x, qcores, 1, scales=scales))
+    assert used.get("fused"), "int8 chain fell off the fused path"
+    y_ref = np.asarray(
+        tt_contract_ref(x, tt_dequant_chain(qcores, scales), 1)
+    )
+    np.testing.assert_allclose(
+        y, y_ref, atol=1e-5 * max(np.abs(y_ref).max(), 1e-6)
+    )
 
 
 # ---------------------------------------------------------------------------

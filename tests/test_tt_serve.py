@@ -8,11 +8,18 @@ import pytest
 from repro.core import (
     CompressionPolicy,
     TTCompressor,
+    dequantize_array,
+    dequantize_tt,
     is_tt_linear,
+    quant_dtype,
+    quantize_array,
+    quantize_tt,
+    quantize_tt_tree,
     select_layer,
     spectral_decay_pytree,
     tt_apply,
     tt_apply_experts,
+    tt_leaf_bytes,
     tt_linear_from_tt,
     tt_param_bytes,
     tt_reconstruct,
@@ -237,6 +244,213 @@ def test_tt_checkpoint_family_guard(rng, tmp_path):
     params_tt, loaded, line = serve_mod._tt_setup(
         like, args, SimpleNamespace(family="ssm"))
     assert "weight bytes" in line
+
+
+# ---------------------------------------------------------------------------
+# Quantized TT cores: round-trip bounds, apply parity, byte accounting
+# ---------------------------------------------------------------------------
+
+def _tt_linear_one(rng, shape=(3, 64, 96), experts=0, eps=0.05):
+    stack = 1 + (1 if experts else 0)
+    w = _decayed(rng, shape)
+    tt = ttd(w, eps=eps, dims=shape)
+    lin = tt_linear_from_tt(tt, shape, stack=stack, in_ndim=1,
+                            dtype=jnp.float32, experts=experts)
+    assert lin is not None
+    return lin
+
+
+def test_quantize_roundtrip_error_bound(rng):
+    """Symmetric round-to-nearest int8: per-element error <= scale/2 =
+    amax/(2*127) — the documented bound the module docstring carries."""
+    a = jnp.asarray(rng.standard_normal((64, 48)) * 3.0, jnp.float32)
+    q, s = quantize_array(a)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(dequantize_array(q, s)) - np.asarray(a))
+    amax = float(np.abs(np.asarray(a)).max())
+    assert err.max() <= amax / (2 * 127) + 1e-7
+    # per-row (lead-table) scales bound per ROW by that row's amax
+    qr, sr = quantize_array(a, axis=-1)
+    err_r = np.abs(np.asarray(dequantize_array(qr, sr, axis=-1))
+                   - np.asarray(a))
+    row_amax = np.abs(np.asarray(a)).max(axis=-1, keepdims=True)
+    assert (err_r <= row_amax / (2 * 127) + 1e-7).all()
+    # all-zero groups round-trip exactly (scale pinned to 1)
+    qz, sz = quantize_array(jnp.zeros((4, 4)))
+    assert float(sz) == 1.0
+    np.testing.assert_array_equal(np.asarray(dequantize_array(qz, sz)), 0.0)
+
+
+def test_quantize_tt_roundtrip_and_idempotence(rng):
+    """dequantize_tt inverts to the grid; requantizing the dequantized form
+    (absmax calibration) is bit-identical — the property the int8
+    checkpoint round-trip leans on."""
+    lin = _tt_linear_one(rng)
+    q = quantize_tt(lin)
+    assert q.quantized and not lin.quantized
+    assert all(g.dtype == jnp.int8 for g in q.cores)
+    assert q.lead.dtype == jnp.int8 and q.lead_scale.shape == (3,)
+    wide = dequantize_tt(q)
+    assert not wide.quantized
+    q2 = quantize_tt(wide)
+    for a, b in zip(jax.tree.leaves(q), jax.tree.leaves(q2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # double-quantization is a bug, not a silent no-op
+    with pytest.raises(AssertionError):
+        quantize_tt(q)
+
+
+def test_quantized_tt_apply_matches_dequantized(rng):
+    """Quantized apply (fused in-kernel dequant) == apply of the explicitly
+    dequantized TTLinear — same chain, same order, f32 tolerance."""
+    lin = _tt_linear_one(rng)
+    q = quantize_tt(lin)
+    wide = dequantize_tt(q)
+    x = jnp.asarray(rng.standard_normal((5, 64)), jnp.float32)
+    for layer in range(3):
+        y_q = np.asarray(tt_apply(x, select_layer(q, layer)))
+        y_w = np.asarray(tt_apply(x, select_layer(wide, layer)))
+        scale = max(np.abs(y_w).max(), 1e-6)
+        np.testing.assert_allclose(y_q, y_w, atol=1e-4 * scale)
+        # and the quantization itself stays small vs the unquantized apply
+        y0 = np.asarray(tt_apply(x, select_layer(lin, layer)))
+        assert np.abs(y_q - y0).max() <= 0.05 * max(np.abs(y0).max(), 1.0)
+
+
+def test_quantized_expert_bank_matches_dequantized(rng):
+    """Quantized expert-batched chain == per-expert dequantized applies —
+    the (layer, expert)-row lead scales must land on the right rows."""
+    lin = _tt_linear_one(rng, shape=(3, 4, 32, 48), experts=1)
+    q = quantize_tt(lin)
+    assert q.lead_scale.shape == (3, 4)
+    wide = dequantize_tt(q)
+    x = jnp.asarray(rng.standard_normal((4, 5, 32)), jnp.float32)
+    for layer in range(3):
+        y_q = np.asarray(tt_apply_experts(x, select_layer(q, layer)))
+        y_w = np.asarray(tt_apply_experts(x, select_layer(wide, layer)))
+        scale = max(np.abs(y_w).max(), 1e-6)
+        np.testing.assert_allclose(y_q, y_w, atol=1e-4 * scale)
+
+
+def test_quant_dtype_registry():
+    assert quant_dtype("int8") == jnp.int8
+    with pytest.raises(ValueError, match="int8"):
+        quant_dtype("int3")
+    with pytest.raises(ValueError, match="calibration"):
+        quantize_array(jnp.ones((4, 4)), calib="bogus")
+    with pytest.raises(ValueError, match="calibration"):
+        quantize_array(jnp.ones((4, 4)), calib="p0")   # 0th pct is invalid
+
+
+def test_tt_param_bytes_matches_tree_walk(rng):
+    """The reported bytes must equal an independent jax.tree byte walk over
+    every array hanging off the pytree — scales included.  This is the
+    regression for the original bug: tt_param_bytes enumerated lead+cores
+    by hand, so the quantization scale arrays escaped the accounting."""
+    lin = _tt_linear_one(rng)
+    q = quantize_tt(lin)
+    tree = {"tt": q, "raw": jnp.asarray(rng.standard_normal((16,)),
+                                        jnp.float32)}
+
+    def walk_bytes(t):
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in jax.tree.leaves(t)
+                   if hasattr(a, "size") and hasattr(a, "dtype"))
+
+    # TTLinear is a registered pytree node: jax.tree.leaves reaches lead,
+    # cores, scales, and lead_scale without any hand enumeration
+    assert tt_param_bytes(tree) == walk_bytes(tree)
+    # quantization shrinks the leaf even while scales ride along
+    assert tt_param_bytes({"w": q}) < tt_param_bytes({"w": lin})
+    # tt_leaf_bytes agrees with the same walk restricted to the TT leaf
+    leaf_b, dense_b = tt_leaf_bytes(tree)
+    assert leaf_b == walk_bytes({"w": q})
+    assert dense_b == 3 * 64 * 96 * 4              # L * in * out * f32
+
+
+def test_quantize_tt_tree_only_touches_tt_leaves(rng):
+    lin = _tt_linear_one(rng)
+    raw = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    tree = quantize_tt_tree({"tt": lin, "raw": raw})
+    assert tree["tt"].quantized
+    assert tree["raw"].dtype == jnp.float32
+    # idempotent at the tree level: already-quantized leaves pass through
+    tree2 = quantize_tt_tree(tree)
+    assert tree2["tt"] is tree["tt"]
+
+
+def test_tt_native_params_quant(rng):
+    """tt_native_params(quant=...) returns int8 TTLinear leaves; junk quant
+    names raise the registry's ValueError before any conversion work."""
+    payload = _payload_one(rng)
+    tree = model_common.tt_native_params(payload, quant="int8")
+    leaves = [leaf for leaf in jax.tree.leaves(tree, is_leaf=is_tt_linear)
+              if is_tt_linear(leaf)]
+    assert leaves and all(
+        leaf.quantized and all(g.dtype == jnp.int8 for g in leaf.cores)
+        for leaf in leaves
+    )
+    with pytest.raises(ValueError, match="int8"):
+        model_common.tt_native_params(payload, quant="fp97")
+
+
+def test_tt_payload_checkpoint_quantized_roundtrip(rng, tmp_path):
+    """save(quant="int8") → load → requantize is bit-exact: the loaded
+    cores sit on the integer grid, so absmax requantization reproduces the
+    saved integer values and scales."""
+    from repro.checkpoint.checkpoint import load_tt_payload, save_tt_payload
+
+    params = {"w": jnp.asarray(_decayed(rng, (3, 32, 48)))}
+    comp = TTCompressor(CompressionPolicy(eps=0.1, min_size=1024))
+    payload, _ = comp.compress(params)
+    path = str(tmp_path / "ttq")
+    save_tt_payload(path, payload, quant="int8")
+
+    loaded, manifest = load_tt_payload(path, like=params)
+    assert manifest["quant"] == "int8"
+    cp0 = [c for c in jax.tree.leaves(
+        payload, is_leaf=lambda x: hasattr(x, "kind")) if c.kind == "tt"]
+    cp1 = [c for c in jax.tree.leaves(
+        loaded, is_leaf=lambda x: hasattr(x, "kind")) if c.kind == "tt"]
+    assert len(cp0) == len(cp1) == 1
+    for g0, g1 in zip(cp0[0].tt.cores, cp1[0].tt.cores):
+        q0, s0 = quantize_array(jnp.asarray(g0, jnp.float32))
+        q1, s1 = quantize_array(jnp.asarray(g1, jnp.float32))
+        np.testing.assert_array_equal(np.asarray(q0), np.asarray(q1))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+        # loaded core == dequantized form of the saved one (grid-exact)
+        np.testing.assert_array_equal(
+            np.asarray(g1), np.asarray(dequantize_array(q0, s0))
+        )
+
+
+def test_tt_setup_quantized_reports_byte_ladder(rng, tmp_path):
+    """--weights tt-int8 through _tt_setup: quantized leaves come back and
+    the report line carries the dense -> tt -> tt-int8 ladder plus the
+    TT-served-leaf reduction the bench lane gates on."""
+    from argparse import Namespace
+    from types import SimpleNamespace
+
+    from repro.launch import serve as serve_mod
+
+    params = {"layers": {"mlp": {"w_gate": jnp.asarray(
+        _decayed(rng, (3, 64, 96)), jnp.bfloat16)}}}
+    args = Namespace(weights="tt-int8", quant_calib="absmax",
+                     tt_checkpoint=None, tt_eps=0.1, tt_alpha=1.0,
+                     save_tt_checkpoint=str(tmp_path / "ck"))
+    params_tt, payload, line = serve_mod._tt_setup(
+        params, args, SimpleNamespace(family=None, name="test"))
+    leaves = [leaf for leaf in jax.tree.leaves(
+        params_tt, is_leaf=is_tt_linear) if is_tt_linear(leaf)]
+    assert leaves and all(leaf.quantized for leaf in leaves)
+    assert "tt-int8" in line and "TT-served leaves" in line
+    # the saved checkpoint recorded the quantized form
+    import json, os
+    with open(os.path.join(str(tmp_path / "ck"), "tt_manifest.json")) as f:
+        assert json.load(f)["quant"] == "int8"
+    with pytest.raises(ValueError, match="int8"):
+        serve_mod._quant_of("tt-fp97")
+    assert serve_mod._quant_of("tt") is None
 
 
 # ---------------------------------------------------------------------------
