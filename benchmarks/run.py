@@ -25,6 +25,11 @@
   serve_load  Front-door lane — N router replicas + asyncio SSE server
             under a seeded closed-loop request storm (req/s, p50/p99
             latency, slot occupancy; token parity vs isolated runs)
+  chaos     Fault-tolerance lane — seeded FaultPlan injects a replica
+            crash, a slow-chunk straggler, a NaN-poisoned request, and a
+            corrupt checkpoint; gates zero hung tickets, typed errors,
+            survivor parity vs isolated runs, and full live-replica
+            recovery
 
 ``--fast`` propagates to every benchmark that accepts a ``fast=`` kwarg
 (smaller sweeps, single method) — the CI smoke lane that catches
@@ -35,7 +40,7 @@ root (``benchmarks/record.py``) so the perf trajectory is tracked across
 PRs, not just printed: ``decode_driver`` → BENCH_decode.json, ``tt_serve``/
 ``tt_families`` → BENCH_tt_serve.json, ``tt_quant`` (and the quantized leg
 of ``tt_families``) → BENCH_tt_quant.json, ``serve_load`` →
-BENCH_serve_load.json.
+BENCH_serve_load.json, ``chaos`` → BENCH_chaos.json.
 """
 
 from __future__ import annotations
@@ -113,6 +118,11 @@ def bench_serve_load(fast: bool = False):
     serve_load.run(fast=fast)
 
 
+def bench_chaos(fast: bool = False):
+    from benchmarks import chaos_serve
+    chaos_serve.run(fast=fast)
+
+
 ALL = {
     "table1": bench_table1,
     "table3": bench_table3,
@@ -125,6 +135,7 @@ ALL = {
     "tt_quant": bench_tt_quant,
     "decode_driver": bench_decode_driver,
     "serve_load": bench_serve_load,
+    "chaos": bench_chaos,
 }
 
 

@@ -13,11 +13,19 @@ Fault-tolerance contract (runtime/fault_tolerance.py):
   * arrays are restorable onto a DIFFERENT mesh: values are saved unsharded
     (gathered) per leaf, and re-sharded by the caller's shardings on load —
     elastic restarts change the mesh without touching the checkpoint;
-  * save is atomic-per-step and keeps the newest ``keep`` steps.
+  * save is atomic-per-step and keeps the newest ``keep`` steps;
+  * integrity: every array gets a sha256 in the manifest at save time and
+    is verified on load (``verify=False`` opts out) — a truncated or
+    bit-flipped shard raises ``CheckpointCorrupt`` naming the bad leaf
+    instead of silently serving garbage weights;
+  * stale ``*.tmp`` directories from crashed saves are detected and
+    cleaned when a ``CheckpointManager`` opens the directory.
 """
 
 from __future__ import annotations
 
+import glob
+import hashlib
 import json
 import os
 import shutil
@@ -27,6 +35,70 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A committed checkpoint failed integrity verification (truncated
+    archive, bit-flipped array, missing leaf).  The message names the
+    offending file/leaf; the operator restores from an older step or
+    re-exports the payload."""
+
+
+def _sha256(arr: np.ndarray) -> str:
+    """Content hash of one array as stored: dtype + shape + raw bytes, so
+    a reinterpreted (right bytes, wrong dtype) leaf also fails."""
+    a = np.ascontiguousarray(arr)
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(str(a.shape).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _load_npz(path: str):
+    """np.load with corruption mapped to CheckpointCorrupt (a truncated or
+    bit-flipped zip raises BadZipFile/zlib.error/ValueError deep inside
+    numpy — surface them as one typed error)."""
+    try:
+        return np.load(path)
+    except FileNotFoundError:
+        raise
+    except Exception as e:
+        raise CheckpointCorrupt(
+            f"{path}: unreadable archive ({type(e).__name__}: {e})") from e
+
+
+def _get_array(data, key: str, path: str) -> np.ndarray:
+    try:
+        return data[key]
+    except KeyError:
+        raise CheckpointCorrupt(f"{path}: missing array {key!r}") from None
+    except Exception as e:   # per-member CRC/zlib failure on decompress
+        raise CheckpointCorrupt(
+            f"{path}: array {key!r} unreadable "
+            f"({type(e).__name__}: {e})") from e
+
+
+def _verify_sums(data, sums: Dict[str, str], path: str) -> None:
+    for key in sorted(sums):
+        got = _sha256(_get_array(data, key, path))
+        if got != sums[key]:
+            raise CheckpointCorrupt(
+                f"{path}: checksum mismatch for leaf {key!r} "
+                f"(expected {sums[key][:12]}…, got {got[:12]}…) — shard is "
+                f"truncated or bit-flipped")
+
+
+def clean_stale_tmp(directory: str) -> List[str]:
+    """Remove ``*.tmp`` directories left by saves that crashed before
+    their atomic rename.  Returns the paths removed.  Safe to call on an
+    open checkpoint dir as long as no save is in flight."""
+    removed = []
+    for tmp in glob.glob(os.path.join(directory, "*.tmp")):
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
+            removed.append(tmp)
+    return removed
 
 
 def _flatten_with_names(tree) -> Tuple[List[Tuple[str, Any]], Any]:
@@ -138,7 +210,8 @@ def save_tt_payload(directory: str, payload, extra: Optional[Dict] = None,
     os.makedirs(tmp, exist_ok=True)
     np.savez(os.path.join(tmp, "tt_payload.npz"), **arrays)
     manifest = {"time": time.time(), "leaves": leaves, "extra": extra or {},
-                "family": family, "quant": quant}
+                "family": family, "quant": quant,
+                "sha256": {k: _sha256(v) for k, v in arrays.items()}}
     with open(os.path.join(tmp, "tt_manifest.json"), "w") as f:
         json.dump(manifest, f)
     with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
@@ -157,9 +230,15 @@ def save_tt_payload(directory: str, payload, extra: Optional[Dict] = None,
     return directory
 
 
-def load_tt_payload(directory: str, like) -> Tuple[Any, Dict]:
+def load_tt_payload(directory: str, like, verify: bool = True
+                    ) -> Tuple[Any, Dict]:
     """Restore a TT payload into the tree structure of ``like`` (the params
-    pytree the payload was compressed from, or any same-structure tree)."""
+    pytree the payload was compressed from, or any same-structure tree).
+
+    ``verify=True`` (default) checks every array against the sha256 the
+    manifest recorded at save time and raises ``CheckpointCorrupt`` naming
+    the bad leaf; payloads written before checksums existed load without
+    verification either way."""
     import jax.numpy as jnp
 
     from repro.core.compression import CompressedParam
@@ -173,7 +252,10 @@ def load_tt_payload(directory: str, like) -> Tuple[Any, Dict]:
             raise FileNotFoundError(f"no committed TT payload in {directory}")
     with open(os.path.join(directory, "tt_manifest.json")) as f:
         manifest = json.load(f)
-    data = np.load(os.path.join(directory, "tt_payload.npz"))
+    npz_path = os.path.join(directory, "tt_payload.npz")
+    data = _load_npz(npz_path)
+    if verify and manifest.get("sha256"):
+        _verify_sums(data, manifest["sha256"], npz_path)
 
     named, treedef = _flatten_with_names(like)
     by_name = {m["name"]: m for m in manifest["leaves"]}
@@ -224,6 +306,9 @@ class CheckpointManager:
         self.async_save = async_save
         self._pending: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+        # a save that crashed before its atomic rename leaves step_*.tmp
+        # behind; nothing references it, so reclaim the space on open
+        self.cleaned_tmp = clean_stale_tmp(directory)
 
     # ---------------- save ----------------
 
@@ -254,7 +339,8 @@ class CheckpointManager:
                 "step": step,
                 "time": time.time(),
                 "leaves": [
-                    {"name": n, "shape": list(v.shape), "dtype": str(v.dtype)}
+                    {"name": n, "shape": list(v.shape), "dtype": str(v.dtype),
+                     "sha256": _sha256(v)}
                     for n, v in host
                 ],
                 "extra": extra or {},
@@ -292,10 +378,14 @@ class CheckpointManager:
         return max(steps) if steps else None
 
     def restore(self, state_like, step: Optional[int] = None,
-                shardings=None) -> Tuple[Any, Dict]:
+                shardings=None, verify: bool = True) -> Tuple[Any, Dict]:
         """Restore into the structure of ``state_like``; apply ``shardings``
         (a matching pytree of NamedSharding) if given — this is where
-        elastic mesh changes are absorbed."""
+        elastic mesh changes are absorbed.
+
+        ``verify=True`` (default) re-hashes every shard array against the
+        manifest's sha256 and raises ``CheckpointCorrupt`` naming the bad
+        leaf; checkpoints from before checksums load unverified."""
         self.wait()
         if step is None:
             step = self.latest_step()
@@ -304,7 +394,12 @@ class CheckpointManager:
         path = self._step_dir(step)
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
-        data = np.load(os.path.join(path, "shard_0.npz"))
+        shard_path = os.path.join(path, "shard_0.npz")
+        data = _load_npz(shard_path)
+        if verify:
+            sums = {m["name"].replace("/", "__"): m["sha256"]
+                    for m in manifest["leaves"] if "sha256" in m}
+            _verify_sums(data, sums, shard_path)
         named, treedef = _flatten_with_names(state_like)
         leaves = []
         sh_flat = None
@@ -312,7 +407,7 @@ class CheckpointManager:
             sh_named, _ = _flatten_with_names(shardings)
             sh_flat = [s for _, s in sh_named]
         for i, (n, like) in enumerate(named):
-            arr = data[n.replace("/", "__")]
+            arr = _get_array(data, n.replace("/", "__"), shard_path)
             # cast via jnp (numpy lacks cast kernels for bf16/fp8 ml_dtypes)
             if hasattr(like, "dtype") and arr.dtype != like.dtype:
                 arr = np.asarray(jax.numpy.asarray(arr).astype(like.dtype))

@@ -206,10 +206,18 @@ class Request(NamedTuple):
     topk: int = 0                 # per-request top-k (0 = no filter)
 
 
+class InvalidRequest(ValueError):
+    """A submission rejected at validation — bad shape, bad sampling
+    params, out-of-range tokens, or capacity the pool cannot hold.  The
+    request never consumed a queue slot (HTTP 400)."""
+
+
 class Completion(NamedTuple):
     uid: int
     tokens: np.ndarray            # (gen,) int32 generated tokens
     prompt_logits: np.ndarray     # (V,) fp32 logits after the prompt
+    bad: bool = False             # tripped the NaN/Inf logit guard — the
+                                  # tokens are poisoned; quarantine them
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -230,6 +238,8 @@ def _admit_slot(state, i, token_row, prompt_len, total_len, key_row,
         rng=state.rng.at[i].set(key_row),
         temp=state.temp.at[i].set(temp),
         topk=state.topk.at[i].set(topk),
+        bad=(None if state.bad is None
+             else state.bad.at[i].set(False)),
     )
 
 
@@ -255,6 +265,8 @@ def _admit_slot_mem(admit_memory, state, params, i, token_row, prompt_len,
         rng=state.rng.at[i].set(key_row),
         temp=state.temp.at[i].set(temp),
         topk=state.topk.at[i].set(topk),
+        bad=(None if state.bad is None
+             else state.bad.at[i].set(False)),
     )
 
 
@@ -395,6 +407,7 @@ class Engine:
             done=(model_common.make_done_buf(slots * chunk_steps, max_len,
                                              vocab)
                   if scan_mode else None),
+            bad=np.zeros((slots,), bool),
         )
 
     @property
@@ -427,35 +440,65 @@ class Engine:
         slot-steps."""
         return self.slot_steps / max(self.steps * self.slots, 1)
 
+    def _token_ids(self, x, what: str) -> np.ndarray:
+        """Coerce one token-id field to a flat int32 array, rejecting
+        garbage (non-numeric, non-integral, out-of-vocab) with a typed
+        error instead of silently truncating or clamping downstream."""
+        try:
+            arr = np.asarray(x)
+        except Exception as e:
+            raise InvalidRequest(f"{what} is not array-like: {e}") from None
+        if arr.dtype.kind == "f":
+            if arr.size and not np.all(np.isfinite(arr) & (arr == np.floor(arr))):
+                raise InvalidRequest(
+                    f"{what} must be integer token ids, got non-integral "
+                    f"floats")
+        elif arr.dtype.kind not in "iu":
+            raise InvalidRequest(
+                f"{what} must be integer token ids, got dtype {arr.dtype}")
+        arr = arr.reshape(-1).astype(np.int32)
+        vocab = self.model.cfg.vocab_size
+        if arr.size and (int(arr.min()) < 0 or int(arr.max()) >= vocab):
+            raise InvalidRequest(
+                f"{what} token ids must be in [0, {vocab}), got range "
+                f"[{int(arr.min())}, {int(arr.max())}]")
+        return arr
+
     def validate(self, prompt, gen: int, src_tokens=None,
                  temperature: Optional[float] = None,
                  top_k: Optional[int] = None):
         """Normalize + validate a request WITHOUT queuing it — the fail-
         fast check the router/server front door runs before admission (a
         bad request must 400 before it consumes a queue slot).  Returns
-        ``(prompt, src, sampling)`` ready for ``submit``; raises the same
-        ``ValueError``s ``submit`` does."""
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        ``(prompt, src, sampling)`` ready for ``submit``; raises
+        ``InvalidRequest`` (a ``ValueError``) on anything malformed —
+        oversized shapes, non-integer or out-of-range token ids, bad
+        sampling params — so callers can map it to a typed 400."""
+        prompt = self._token_ids(prompt, "prompt")
+        if not isinstance(gen, (int, np.integer)):
+            raise InvalidRequest(
+                f"gen must be an integer, got {type(gen).__name__}")
         if len(prompt) < 1 or gen < 1:
-            raise ValueError(
+            raise InvalidRequest(
                 f"request needs a non-empty prompt and gen >= 1, got "
                 f"plen={len(prompt)} gen={gen}"
             )
         src = None
         if src_tokens is not None:
             if self.model.admit_memory is None:
-                raise ValueError(
+                raise InvalidRequest(
                     f"family {self.model.cfg.family!r} takes token-only "
                     f"requests (no encoder input); src_tokens is "
                     f"encdec-only"
                 )
-            src = np.asarray(src_tokens, np.int32).reshape(-1)
+            src = self._token_ids(src_tokens, "src_tokens")
             if len(src) < 1:
-                raise ValueError("src_tokens, when given, must be non-empty")
+                raise InvalidRequest(
+                    "src_tokens, when given, must be non-empty")
         need_dec = len(prompt) + gen
         need_enc = 0 if src is None else len(src)
         if need_dec > self.max_len or need_enc > self.src_capacity:
-            raise ValueError(
+            raise InvalidRequest(
                 f"request needs {need_dec} decoder positions"
                 + (f" and {need_enc} encoder positions" if src is not None
                    else "")
@@ -555,8 +598,9 @@ class Engine:
         plen = len(req.prompt)
         toks = np.asarray(self.state.tokens[i, plen:plen + req.gen])
         plog = np.asarray(self.state.prompt_logits[i])
+        bad = bool(np.asarray(self.state.bad[i]))
         self._occupant[i] = None
-        return Completion(req.uid, toks, plog)
+        return Completion(req.uid, toks, plog, bad=bad)
 
     def _admit_one(self, i: int, req: Request) -> None:
         plen = len(req.prompt)
@@ -697,10 +741,12 @@ class Engine:
             # order is the host-mirrored retirement order
             dt = np.asarray(self.state.done.tokens[:len(retired)])
             dl = np.asarray(self.state.done.prompt_logits[:len(retired)])
+            db = np.asarray(self.state.done.bad[:len(retired)])
             for j, req in enumerate(retired):
                 plen = len(req.prompt)
                 out.append(Completion(
-                    req.uid, dt[j, plen:plen + req.gen].copy(), dl[j]))
+                    req.uid, dt[j, plen:plen + req.gen].copy(), dl[j],
+                    bad=bool(db[j])))
         return out
 
     # -- main loop ----------------------------------------------------------

@@ -290,12 +290,16 @@ def serve_http(args) -> None:
             )
             for _ in range(args.replicas)
         ]
-        router = Router(engines, queue_depth=args.queue_depth)
+        watchdog = (None if args.watchdog_ms is None
+                    else args.watchdog_ms / 1e3)
+        router = Router(engines, queue_depth=args.queue_depth,
+                        watchdog_s=watchdog)
         deadline = (None if args.deadline_ms is None
                     else args.deadline_ms / 1e3)
         print(f"[serve] {args.replicas} replica(s) x {args.slots} slots, "
               f"admission={engines[0].admission}, "
-              f"queue_depth={args.queue_depth}")
+              f"queue_depth={args.queue_depth}"
+              + (f", watchdog={watchdog:g}s" if watchdog else ""))
         run_server(router, host=args.host, port=args.port,
                    default_deadline=deadline)
 
@@ -370,6 +374,12 @@ def main() -> None:
                     help="server-wide default per-request deadline; an "
                          "expired request is cancelled (504) and its slot "
                          "freed.  Requests can override via 'deadline_ms'")
+    ap.add_argument("--watchdog-ms", type=float, default=None,
+                    help="per-chunk heartbeat watchdog: a replica whose "
+                         "worker goes stale longer than this while holding "
+                         "work is marked suspect (no new placements) until "
+                         "it recovers; worker DEATH is always supervised "
+                         "(failover + bounded-backoff restart) regardless")
     ap.add_argument("--admission", choices=engine_mod.ADMISSION_MODES,
                     default="auto",
                     help="slot admission: 'scan' = in-scan device-resident "

@@ -17,11 +17,21 @@ Endpoints:
     (``text/event-stream``): ``data: {"tokens": [...]}`` per fused chunk,
     then ``event: done`` with the full result.  Error mapping — 400 bad
     request (fails BEFORE placement), 429 + ``Retry-After`` when every
-    replica is at its queue bound, 504 when the per-request deadline
-    expires (slot freed), ``event: error`` mid-stream.
+    live replica is at its queue bound, 503 + ``Retry-After`` when no
+    replica is live or the serving replica died mid-flight
+    (``replica_lost`` — retryable, the request was never silently
+    re-decoded), 500 when a request is quarantined for non-finite logits
+    (``poisoned``), 504 when the per-request deadline expires (slot
+    freed), ``event: error`` mid-stream.  ``Retry-After`` is derived from
+    the live queue depth over the measured completion rate, not a
+    constant.
 
-``GET /healthz``  liveness probe; ``GET /stats``  router/replica counters
-(outstanding, busy slots, lifetime occupancy).
+``GET /healthz``  health probe: ``{"status": "ok"|"degraded"|"down",
+"live_replicas": n, "queue_depth": outstanding}`` — 200 while at least
+one replica is live (``degraded`` = some replicas down or restarting),
+503 + ``Retry-After`` when none is.  ``GET /stats``  router/replica
+counters (state, outstanding, busy slots, lifetime occupancy, restarts,
+last error).
 
 Client disconnects propagate: the handler watches the socket for EOF
 while waiting on events and calls ``Router.cancel`` so an abandoned
@@ -42,7 +52,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.launch.router import QueueFull, Router
+from repro.launch.router import NoLiveReplicas, QueueFull, Router
 
 _MAX_HEADER = 64 * 1024
 _MAX_BODY = 16 * 1024 * 1024
@@ -56,7 +66,7 @@ def _response(status: int, body: bytes, content_type: str = "application/json",
               extra: str = "") -> bytes:
     reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
               405: "Method Not Allowed", 429: "Too Many Requests",
-              500: "Internal Server Error",
+              500: "Internal Server Error", 503: "Service Unavailable",
               504: "Gateway Timeout"}.get(status, "OK")
     return (
         f"HTTP/1.1 {status} {reason}\r\n"
@@ -146,9 +156,27 @@ class Server:
             except (ConnectionError, asyncio.CancelledError):
                 pass
 
+    def _retry_after_header(self) -> str:
+        return f"Retry-After: {self.router.retry_after()}\r\n"
+
     async def _dispatch(self, method, path, body, reader, writer) -> None:
         if method == "GET" and path == "/healthz":
-            writer.write(_response(200, _json_bytes({"ok": True})))
+            st = self.router.stats()
+            live = st["live_replicas"]
+            depth = sum(r["outstanding"] for r in st["replicas"])
+            if live == len(st["replicas"]):
+                status = "ok"
+            elif live > 0:
+                status = "degraded"    # some replicas dead/restarting
+            else:
+                status = "down"        # load balancer should drain us
+            body_obj = {"status": status, "live_replicas": live,
+                        "queue_depth": depth}
+            if live > 0:
+                writer.write(_response(200, _json_bytes(body_obj)))
+            else:
+                writer.write(_response(503, _json_bytes(body_obj),
+                                       extra=self._retry_after_header()))
             return
         if method == "GET" and path == "/stats":
             writer.write(_response(200, _json_bytes(self.router.stats())))
@@ -192,7 +220,12 @@ class Server:
                 deadline=deadline, stream=stream)
         except QueueFull as e:
             writer.write(_response(429, _json_bytes({"error": str(e)}),
-                                   extra="Retry-After: 1\r\n"))
+                                   extra=self._retry_after_header()))
+            return
+        except NoLiveReplicas as e:
+            writer.write(_response(503, _json_bytes(
+                {"error": str(e), "retryable": True}),
+                extra=self._retry_after_header()))
             return
         except ValueError as e:
             writer.write(_response(400, _json_bytes({"error": str(e)})))
@@ -254,6 +287,17 @@ class Server:
             elif kind == "cancelled":
                 writer.write(_response(500, _json_bytes(
                     {"error": "cancelled", "rid": ticket.rid})))
+            elif kind == "replica_lost":
+                # retryable: at-most-once delivery means the request was
+                # NOT re-decoded — the client decides whether to resend
+                writer.write(_response(503, _json_bytes(
+                    {"error": str(payload), "rid": ticket.rid,
+                     "retryable": True}),
+                    extra=self._retry_after_header()))
+            elif kind == "poisoned":
+                writer.write(_response(500, _json_bytes(
+                    {"error": str(payload), "rid": ticket.rid,
+                     "kind": "poisoned"})))
             else:
                 writer.write(_response(500, _json_bytes(
                     {"error": str(payload), "rid": ticket.rid})))
@@ -286,7 +330,11 @@ class Server:
                     writer.write(_sse({"error": "deadline expired"},
                                       event="error"))
                 else:
-                    writer.write(_sse({"error": str(payload or kind)},
+                    # replica_lost / poisoned / error — the SSE channel has
+                    # one error shape; ``kind`` tells the client which
+                    writer.write(_sse({"error": str(payload or kind),
+                                       "kind": kind,
+                                       "retryable": kind == "replica_lost"},
                                       event="error"))
                 await writer.drain()
             except ConnectionError:

@@ -393,6 +393,8 @@ class DoneBuf(NamedTuple):
     tokens: jax.Array          # (D, T_max) int32
     prompt_logits: jax.Array   # (D, V) fp32
     count: jax.Array           # () int32
+    bad: Optional[jax.Array] = None   # (D,) bool — retired slot tripped the
+                                      # NaN/Inf logit guard (quarantined)
 
 
 def make_scan_queue(capacity: int, t_max: int) -> ScanQueue:
@@ -415,6 +417,7 @@ def make_done_buf(capacity: int, t_max: int, vocab: int) -> DoneBuf:
         tokens=jnp.zeros((capacity, t_max), jnp.int32),
         prompt_logits=jnp.zeros((capacity, vocab), jnp.float32),
         count=jnp.zeros((), jnp.int32),
+        bad=jnp.zeros((capacity,), bool),
     )
 
 
@@ -473,6 +476,13 @@ class GenState(NamedTuple):
     queue / done — optional device-resident admission queue and retired-
                   slot output buffer (in-scan continuous batching); ``None``
                   on the uniform-batch path and under boundary admission.
+    bad         — optional (B,) bool numeric-guard accumulator: set (and
+                  never cleared until re-admission) once a slot's logits go
+                  non-finite.  The slot keeps its deterministic retirement
+                  step — the host-mirrored schedule must not observe NaNs —
+                  and the flag rides out with the done flags at harvest, so
+                  quarantine costs no extra readback.  ``None`` on the
+                  uniform-batch path.
     """
     cache: object
     tokens: jax.Array
@@ -485,18 +495,21 @@ class GenState(NamedTuple):
     topk: Optional[jax.Array] = None
     queue: Optional[ScanQueue] = None
     done: Optional[DoneBuf] = None
+    bad: Optional[jax.Array] = None
 
 
 def gen_init(cache, tokens, prompt_len, total_len, vocab: int,
              active=None, rng=None, temp=None, topk=None,
              queue: Optional[ScanQueue] = None,
-             done: Optional[DoneBuf] = None) -> GenState:
+             done: Optional[DoneBuf] = None,
+             bad=None) -> GenState:
     """Pack a slot pool into a GenState (per-slot lengths may differ).
 
     ``temp``/``topk`` attach per-slot sampling params ((B,) arrays, used by
     ``Sampling(per_slot=True)``); ``queue``/``done`` attach the in-scan
-    admission machinery.  All four default to None — the uniform-batch
-    ``generate`` path carries none of them.
+    admission machinery; ``bad`` attaches the per-slot NaN/Inf logit guard.
+    All default to None — the uniform-batch ``generate`` path carries none
+    of them.
     """
     tokens = jnp.asarray(tokens, jnp.int32)
     b = tokens.shape[0]
@@ -519,6 +532,7 @@ def gen_init(cache, tokens, prompt_len, total_len, vocab: int,
         topk=None if topk is None else jnp.asarray(topk, jnp.int32),
         queue=queue,
         done=done,
+        bad=None if bad is None else jnp.asarray(bad, bool),
     )
 
 
@@ -543,7 +557,7 @@ def _scan_admit(state: GenState) -> GenState:
         q = s.queue
         cache, tokens, plog = s.cache, s.tokens, s.prompt_logits
         plen, tlen, act = s.prompt_len, s.total_len, s.active
-        rng, temp, topk = s.rng, s.temp, s.topk
+        rng, temp, topk, bad = s.rng, s.temp, s.topk, s.bad
         head = q.head
         for i in range(b):
             admit = jnp.logical_and(~act[i], head < q.size)
@@ -565,11 +579,13 @@ def _scan_admit(state: GenState) -> GenState:
             plog = plog.at[i].set(
                 jnp.where(admit, jnp.zeros_like(plog[i]), plog[i]))
             act = act.at[i].set(jnp.logical_or(admit, act[i]))
+            if bad is not None:   # new occupant starts with a clean guard
+                bad = bad.at[i].set(jnp.where(admit, False, bad[i]))
             head = head + admit.astype(jnp.int32)
         return s._replace(
             cache=cache, tokens=tokens, prompt_len=plen, total_len=tlen,
             active=act, prompt_logits=plog, rng=rng, temp=temp, topk=topk,
-            queue=q._replace(head=head),
+            queue=q._replace(head=head), bad=bad,
         )
 
     admittable = jnp.logical_and(state.queue.head < state.queue.size,
@@ -586,13 +602,16 @@ def _scan_harvest(state: GenState, retired: jax.Array) -> GenState:
 
     def sweep(s: GenState) -> GenState:
         dt, dl, cnt = s.done.tokens, s.done.prompt_logits, s.done.count
+        db = s.done.bad
         for i in range(b):
             r = retired[i]
             w = jnp.clip(cnt, 0, dcap - 1)
             dt = dt.at[w].set(jnp.where(r, s.tokens[i], dt[w]))
             dl = dl.at[w].set(jnp.where(r, s.prompt_logits[i], dl[w]))
+            if db is not None and s.bad is not None:
+                db = db.at[w].set(jnp.where(r, s.bad[i], db[w]))
             cnt = cnt + r.astype(jnp.int32)
-        return s._replace(done=DoneBuf(dt, dl, cnt))
+        return s._replace(done=DoneBuf(dt, dl, cnt, db))
 
     return jax.lax.cond(jnp.any(retired), sweep, lambda s: s, state)
 
@@ -653,9 +672,18 @@ def gen_step(decode_step, params, state: GenState,
     )
     # the step that writes the slot's last token (index total_len-1) retires it
     active = adv & (newpos <= state.total_len - 2)
+    bad = state.bad
+    if bad is not None:
+        # numeric guard: one isfinite reduction folded into the step.  The
+        # flag only ACCUMULATES — the slot still runs to its scheduled
+        # retirement (masked lockstep makes the extra steps free), because
+        # retiring early would desync the host-mirrored schedule.  It rides
+        # out with the done flags at harvest: no extra readback.
+        finite = jnp.all(jnp.isfinite(logits.astype(jnp.float32)), axis=-1)
+        bad = bad | (adv & ~finite)
     state = state._replace(
         cache=cache, tokens=tokens, active=active,
-        prompt_logits=prompt_logits,
+        prompt_logits=prompt_logits, bad=bad,
     )
     if state.done is not None:
         state = _scan_harvest(state, adv & ~active)

@@ -22,16 +22,33 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import random
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
 class RestartPolicy:
+    """Bounded restarts with exponential backoff.
+
+    ``sleep`` is injectable so tests (and the serving chaos lane) can run
+    the policy with a no-op while production keeps the FULL computed
+    delay — the backoff math and what actually gets slept are the same
+    code path either way.
+    """
     max_restarts: int = 10
     backoff_s: float = 1.0
     backoff_factor: float = 2.0
     max_backoff_s: float = 300.0
+    sleep: Callable[[float], None] = time.sleep
+
+    def backoff(self, restart_index: int) -> float:
+        """Delay before restart #``restart_index`` (1-based), capped at
+        ``max_backoff_s``."""
+        return min(
+            self.backoff_s * self.backoff_factor ** (restart_index - 1),
+            self.max_backoff_s,
+        )
 
     def run(self, make_loop: Callable[[int], int], log=print) -> int:
         """make_loop(start_step) -> last_step, raising on simulated/real
@@ -48,14 +65,11 @@ class RestartPolicy:
                     raise RuntimeError(
                         f"exceeded {self.max_restarts} restarts"
                     ) from e
-                delay = min(
-                    self.backoff_s * self.backoff_factor ** (restarts - 1),
-                    self.max_backoff_s,
-                )
+                delay = self.backoff(restarts)
                 log(f"[ft] failure at step {e.step} ({e.reason}); "
                     f"restart #{restarts} from step {e.resume_step} "
                     f"after {delay:.1f}s backoff")
-                time.sleep(min(delay, 0.01))  # tests: don't actually sleep
+                self.sleep(delay)
 
 
 class TrainingFailure(Exception):
@@ -101,6 +115,101 @@ class StragglerMonitor:
 
     def cordon_candidates(self, threshold: int = 3) -> List[str]:
         return [h for h, c in self.incidents.items() if c >= threshold]
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a ``FaultPlan`` crash hook inside a replica worker — the
+    deterministic stand-in for an XLA/driver failure killing the thread."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Seeded, deterministic fault-injection plan for the serving plane.
+
+    The training loop has ``simulate_failures``; this is the serving
+    equivalent, consumed by ``launch/router.py`` (per-replica ``fault_hook``
+    called with the replica's worked-chunk counter) and by
+    ``benchmarks/chaos_serve.py``:
+
+      * ``crash_at``  — replica index → chunk index at which that replica's
+        worker raises ``InjectedFault`` (fires once; a restarted replica
+        does not re-crash);
+      * ``stall_at``  — replica index → ``(chunk index, seconds)``: the
+        worker sleeps before that chunk — a slow-chunk straggler that trips
+        the router's watchdog (``SUSPECT``) and then recovers;
+      * ``poison``    — request trace indices served with NaN logits (the
+        chaos lane plants the magic poison token in those prompts);
+      * ``corrupt_checkpoint`` — whether the checkpoint-integrity leg
+        rewrites a committed shard with wrong bytes.
+
+    Same seed ⇒ same plan ⇒ same injection points: the chaos lane is
+    reproducible run to run.
+    """
+    crash_at: Dict[int, int] = dataclasses.field(default_factory=dict)
+    stall_at: Dict[int, Tuple[int, float]] = dataclasses.field(
+        default_factory=dict)
+    poison: Tuple[int, ...] = ()
+    corrupt_checkpoint: bool = False
+    sleep: Callable[[float], None] = time.sleep
+
+    def __post_init__(self):
+        self._fired: set = set()
+
+    @classmethod
+    def seeded(cls, seed: int, replicas: int, requests: int,
+               crashes: int = 1, stalls: int = 1, poisons: int = 1,
+               stall_s: float = 1.0, span: int = 6) -> "FaultPlan":
+        """Draw a plan from ``seed``: ``crashes`` replicas die and
+        ``stalls`` (different) replicas straggle at chunk indices in
+        ``[1, span)``; ``poisons`` of the ``requests`` trace entries are
+        NaN-poisoned."""
+        rng = random.Random(seed)
+        reps = list(range(replicas))
+        rng.shuffle(reps)
+        crashing = reps[:min(crashes, replicas)]
+        stalling = reps[len(crashing):] or reps
+        plan = cls(
+            crash_at={r: rng.randrange(1, span) for r in crashing},
+            stall_at={r: (rng.randrange(1, span), stall_s)
+                      for r in stalling[:min(stalls, len(stalling))]},
+            poison=tuple(sorted(rng.sample(range(requests),
+                                           min(poisons, requests)))),
+            corrupt_checkpoint=True,
+        )
+        return plan
+
+    def hook_for(self, replica: int) -> Callable[[int], None]:
+        """The per-replica hook the router calls with its worked-chunk
+        counter.  Each injection fires exactly once per plan instance."""
+        def hook(chunk: int) -> None:
+            stall = self.stall_at.get(replica)
+            if (stall is not None and chunk >= stall[0]
+                    and ("stall", replica) not in self._fired):
+                self._fired.add(("stall", replica))
+                self.sleep(stall[1])
+            if (replica in self.crash_at
+                    and chunk >= self.crash_at[replica]
+                    and ("crash", replica) not in self._fired):
+                self._fired.add(("crash", replica))
+                raise InjectedFault(
+                    f"fault plan: replica {replica} crash at chunk {chunk}")
+        return hook
+
+    def counts(self) -> Dict[str, int]:
+        """Planned injection counts (what BENCH_chaos.json records)."""
+        return {
+            "crashes": len(self.crash_at),
+            "stalls": len(self.stall_at),
+            "poisoned_requests": len(self.poison),
+            "corrupt_checkpoints": int(self.corrupt_checkpoint),
+        }
+
+    def fired(self) -> Dict[str, int]:
+        """How many planned injections actually fired."""
+        return {
+            "crashes": sum(1 for k in self._fired if k[0] == "crash"),
+            "stalls": sum(1 for k in self._fired if k[0] == "stall"),
+        }
 
 
 def simulate_failures(fail_steps: Dict[int, str]):

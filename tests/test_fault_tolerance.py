@@ -1,0 +1,363 @@
+"""Fault tolerance: serving supervision, numeric quarantine, checkpoint
+integrity, and the control-plane pieces that back them.
+
+Three layers, matching the failure model:
+
+  * control-plane units (no model): RestartPolicy's injectable sleep keeps
+    the FULL exponential delay while tests run instantly; StragglerMonitor
+    and ElasticPlan edge cases; FaultPlan determinism.
+  * checkpoint integrity (tiny arrays, no model): sha256 verification
+    catches bit-flips (naming the leaf) and truncation; ``verify=False``
+    opts out; stale ``*.tmp`` dirs from crashed saves are cleaned.
+  * serving plane (reduced model): a crashed replica worker fails over its
+    never-admitted tickets (parity-exact on the new replica), completes
+    admitted ones with retryable ``ReplicaLost``, restarts under the
+    backoff policy, and surfaces its stored exception in ``stats()``;
+    NaN-poisoned requests are quarantined with ``NumericFault`` while
+    sibling slots keep staggered == isolated parity; garbage submissions
+    are rejected with typed ``InvalidRequest`` before placement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (
+    CheckpointCorrupt, CheckpointManager, clean_stale_tmp,
+)
+from repro.configs import get_config
+from repro.launch.engine import Engine, InvalidRequest, generate
+from repro.launch.router import (
+    DEAD, LIVE, NoLiveReplicas, NumericFault, ReplicaLost, Router,
+)
+from repro.models.registry import build
+from repro.runtime.elastic import plan_mesh
+from repro.runtime.fault_tolerance import (
+    FaultPlan, InjectedFault, RestartPolicy, StragglerMonitor,
+    TrainingFailure,
+)
+
+ARCH = "qwen1.5-0.5b"
+
+
+# ---------------------------------------------------------------------------
+# control-plane units (no model)
+# ---------------------------------------------------------------------------
+
+def test_restart_policy_full_backoff_with_injected_sleep():
+    """The injectable sleep records the FULL exponential delays — the old
+    ``min(delay, 0.01)`` test hack capped production backoff at 10ms."""
+    slept = []
+    policy = RestartPolicy(max_restarts=6, backoff_s=1.0, backoff_factor=2.0,
+                           max_backoff_s=8.0, sleep=slept.append)
+    calls = {"n": 0}
+
+    def loop(start):
+        if calls["n"] < 5:
+            calls["n"] += 1
+            raise TrainingFailure(calls["n"], calls["n"], "boom")
+        return 99
+
+    assert policy.run(loop, log=lambda *a: None) == 99
+    assert slept == [1.0, 2.0, 4.0, 8.0, 8.0]   # exact, capped at max
+
+
+def test_restart_policy_backoff_helper():
+    policy = RestartPolicy(backoff_s=0.5, backoff_factor=3.0,
+                           max_backoff_s=10.0)
+    assert [policy.backoff(i) for i in (1, 2, 3, 4)] == [0.5, 1.5, 4.5, 10.0]
+
+
+def test_straggler_monitor_zero_observations():
+    mon = StragglerMonitor()
+    assert mon.cordon_candidates() == []        # nothing observed, no hosts
+    assert mon.observe(0.1) is False            # first sample seeds the EWMA
+    assert mon.cordon_candidates(threshold=1) == []
+
+
+def test_straggler_monitor_cordons_repeat_offender():
+    mon = StragglerMonitor(sigma_k=3.0, min_steps=5)
+    for i in range(45):
+        t = 0.1 + 0.001 * (i % 3)
+        if i in (20, 30, 40):
+            t = 2.0                             # same host straggles 3x
+        host = "bad-host" if i in (20, 30, 40) else f"host{i % 4}"
+        mon.observe(t, host=host)
+    assert mon.cordon_candidates(threshold=3) == ["bad-host"]
+    assert mon.cordon_candidates(threshold=4) == []
+
+
+def test_elastic_plan_below_model_axis():
+    """Pool smaller than one model group: TP degree halves until it fits;
+    the mesh still builds from an explicit device list."""
+    plan = plan_mesh(available=2, model_parallel=4)
+    assert plan.mesh_shape == (1, 2) and plan.dropped_devices == 0
+
+    plan1 = plan_mesh(available=1, model_parallel=4, prev_shape=(1, 4))
+    assert plan1.mesh_shape == (1, 1) and plan1.changed
+    mesh = plan1.build(devices=jax.devices("cpu")[:1])
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.shape == (1, 1)
+
+
+def test_fault_plan_seeded_determinism():
+    a = FaultPlan.seeded(3, replicas=4, requests=16, crashes=1, stalls=2)
+    b = FaultPlan.seeded(3, replicas=4, requests=16, crashes=1, stalls=2)
+    assert (a.crash_at, a.stall_at, a.poison) == (b.crash_at, b.stall_at,
+                                                  b.poison)
+    assert set(a.crash_at).isdisjoint(a.stall_at)   # distinct replicas
+    assert a.counts()["crashes"] == 1 and a.counts()["stalls"] == 2
+
+
+def test_fault_plan_hook_fires_once():
+    slept = []
+    plan = FaultPlan(crash_at={0: 2}, stall_at={1: (1, 0.5)},
+                     sleep=slept.append)
+    h0, h1 = plan.hook_for(0), plan.hook_for(1)
+    h0(0)
+    h0(1)                                        # below threshold: nothing
+    with pytest.raises(InjectedFault):
+        h0(2)
+    h0(3)                                        # fired already: no re-raise
+    h1(1)
+    h1(5)
+    assert slept == [0.5]                        # stall slept exactly once
+    assert plan.fired() == {"crashes": 1, "stalls": 1}
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity (tiny arrays, no model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def ckpt_state(rng):
+    return {"w": rng.standard_normal((12, 12)).astype(np.float32),
+            "b": rng.standard_normal((6,)).astype(np.float32)}
+
+
+def test_checkpoint_bitflip_names_leaf(tmp_path, ckpt_state):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, ckpt_state)
+    restored, _ = mgr.restore(ckpt_state)       # clean shard verifies
+    assert np.array_equal(np.asarray(restored["w"]), ckpt_state["w"])
+
+    # rewrite the shard with one array zeroed: a VALID zip with wrong
+    # content — only the manifest sha256 can catch this
+    shard = tmp_path / "step_000001" / "shard_0.npz"
+    data = dict(np.load(shard))
+    data["w"] = np.zeros_like(data["w"])
+    np.savez(shard, **data)
+    with pytest.raises(CheckpointCorrupt, match="'w'"):
+        mgr.restore(ckpt_state)
+    # opt-out loads the corrupt shard anyway (operator's escape hatch)
+    restored, _ = mgr.restore(ckpt_state, verify=False)
+    assert not np.any(np.asarray(restored["w"]))
+
+
+def test_checkpoint_truncation_caught(tmp_path, ckpt_state):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(2, ckpt_state)
+    shard = tmp_path / "step_000002" / "shard_0.npz"
+    raw = shard.read_bytes()
+    shard.write_bytes(raw[: len(raw) // 2])
+    with pytest.raises(CheckpointCorrupt):
+        mgr.restore(ckpt_state)
+
+
+def test_checkpoint_missing_leaf_caught(tmp_path, ckpt_state):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(3, ckpt_state)
+    shard = tmp_path / "step_000003" / "shard_0.npz"
+    data = dict(np.load(shard))
+    del data["b"]
+    np.savez(shard, **data)
+    with pytest.raises(CheckpointCorrupt, match="'b'"):
+        mgr.restore(ckpt_state)
+
+
+def test_checkpoint_stale_tmp_cleaned(tmp_path, ckpt_state):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(4, ckpt_state)
+    stale = tmp_path / "step_000009.tmp"
+    stale.mkdir()
+    (stale / "shard_0.npz").write_bytes(b"partial")
+    mgr2 = CheckpointManager(str(tmp_path))     # open detects + cleans
+    assert str(stale) in mgr2.cleaned_tmp and not stale.exists()
+    assert mgr2.latest_step() == 4              # committed step untouched
+    assert clean_stale_tmp(str(tmp_path)) == []
+
+
+# ---------------------------------------------------------------------------
+# serving plane (reduced model)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config(ARCH).reduced()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mk_engine(model, params):
+    return Engine(model, params, slots=2, max_len=24, chunk_steps=3)
+
+
+def _prompt(cfg, n, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, (n,), np.int32)
+
+
+def _fast_router(model, params, n, **kw):
+    """Router with no-op restart sleep (full delays recorded, zero wall
+    clock) and a tight supervision cadence."""
+    slept = []
+    kw.setdefault("restart_policy",
+                  RestartPolicy(max_restarts=3, backoff_s=0.2,
+                                max_backoff_s=1.0, sleep=slept.append))
+    kw.setdefault("engine_factory", lambda old: _mk_engine(model, params))
+    kw.setdefault("supervise_interval", 0.01)
+    router = Router([_mk_engine(model, params) for _ in range(n)],
+                    queue_depth=8, **kw)
+    return router, slept
+
+
+def test_validate_rejects_garbage_typed(setup):
+    """Oversized/garbage submissions fail with InvalidRequest (a
+    ValueError subclass → HTTP 400) BEFORE consuming a queue slot."""
+    cfg, model, params = setup
+    eng = _mk_engine(model, params)
+    ok = _prompt(cfg, 4)
+    with pytest.raises(InvalidRequest):
+        eng.validate(ok, 0, None, None, None)              # gen < 1
+    with pytest.raises(InvalidRequest):
+        eng.validate(ok, 64, None, None, None)             # > max_len
+    with pytest.raises(InvalidRequest, match="must be in"):
+        eng.validate(np.asarray([0, cfg.vocab_size]), 3, None, None, None)
+    with pytest.raises(InvalidRequest):
+        eng.validate(np.asarray([-1, 2]), 3, None, None, None)
+    with pytest.raises(InvalidRequest, match="integral"):
+        eng.validate(np.asarray([0.5, 1.0]), 3, None, None, None)
+    with pytest.raises(InvalidRequest):
+        eng.validate("not tokens", 3, None, None, None)
+    with pytest.raises(InvalidRequest):
+        eng.validate(ok, 2.5, None, None, None)            # non-int gen
+    assert issubclass(InvalidRequest, ValueError)
+
+
+def test_crash_failover_parity_and_restart(setup):
+    """Replica worker dies mid-trace: never-admitted tickets fail over and
+    match isolated runs token-for-token; admitted ones get retryable
+    ReplicaLost (at-most-once — no silent re-decode); the replica
+    restarts under the policy and capacity returns to full."""
+    cfg, model, params = setup
+    router, slept = _fast_router(model, params, 2)
+    router.replicas[0].fault_hook = FaultPlan(crash_at={0: 1}).hook_for(0)
+    router.start()
+    try:
+        reqs = [(_prompt(cfg, 3 + i % 3, seed=i), 4 + i % 3, i)
+                for i in range(6)]
+        tickets = [router.submit(p, g, seed=s) for p, g, s in reqs]
+        done, lost = {}, []
+        for i, t in enumerate(tickets):
+            try:
+                done[i] = t.result(timeout=120).tokens.tolist()
+            except ReplicaLost:
+                lost.append(i)
+        assert done and lost, (sorted(done), lost)   # crash split the trace
+        for i, toks in done.items():
+            p, g, s = reqs[i]
+            iso = generate(model, params, p[None], g, driver="fused",
+                           seed=s)["gen"][0].tolist()
+            assert toks == iso, f"request {i} diverged after failover"
+        deadline = time.monotonic() + 60
+        while router.live_replicas() < 2 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert router.live_replicas() == 2
+        st = router.stats()
+        assert st["replicas"][0]["restarts"] == 1
+        assert slept and slept[0] == 0.2         # policy delay, not slept-for-real
+        # recovered replica serves again, parity-exact
+        p, g, s = _prompt(cfg, 4, seed=99), 5, 99
+        toks = router.submit(p, g, seed=s).result(timeout=120).tokens.tolist()
+        iso = generate(model, params, p[None], g, driver="fused",
+                       seed=s)["gen"][0].tolist()
+        assert toks == iso
+    finally:
+        router.close()
+
+
+def test_poisoned_request_quarantined_siblings_exact(setup):
+    """NaN logits on one slot: that request fails NumericFault; requests
+    sharing the batch keep staggered == isolated parity."""
+    cfg, model, params = setup
+    poison_tok = cfg.vocab_size - 1
+    base = model.decode_step
+
+    def poisoned(p, c, t):
+        import jax.numpy as jnp
+        logits, cache = base(p, c, t)
+        hit = jnp.any(t == poison_tok, axis=-1)
+        return jnp.where(hit[:, None], jnp.asarray(np.nan, logits.dtype),
+                         logits), cache
+
+    pmodel = dataclasses.replace(model, decode_step=poisoned)
+    router = Router([Engine(pmodel, params, slots=2, max_len=24,
+                            chunk_steps=3)], queue_depth=8)
+    router.start()
+    try:
+        prompts = [_prompt(cfg, 3, seed=i) % (cfg.vocab_size - 1)
+                   for i in range(3)]
+        prompts[1][-1] = poison_tok
+        tickets = [router.submit(p, 5, seed=i)
+                   for i, p in enumerate(prompts)]
+        with pytest.raises(NumericFault):
+            tickets[1].result(timeout=120)
+        for i in (0, 2):
+            toks = tickets[i].result(timeout=120).tokens.tolist()
+            iso = generate(pmodel, params, prompts[i][None], 5,
+                           driver="fused", seed=i)["gen"][0].tolist()
+            assert toks == iso, f"sibling {i} diverged next to poison"
+        # the quarantined slot was freed: the engine serves new work
+        p = _prompt(cfg, 4, seed=7) % (cfg.vocab_size - 1)
+        assert router.submit(p, 4, seed=7).result(
+            timeout=120).tokens is not None
+    finally:
+        router.close()
+
+
+def test_dead_worker_surfaced_and_no_live_replicas(setup):
+    """With restarts exhausted, a dead replica stays DEAD with its stored
+    exception in stats() (close() doesn't swallow it), and submit raises
+    NoLiveReplicas."""
+    cfg, model, params = setup
+    router, _ = _fast_router(
+        model, params, 1,
+        restart_policy=RestartPolicy(max_restarts=0, sleep=lambda s: None))
+    router.replicas[0].fault_hook = FaultPlan(crash_at={0: 0}).hook_for(0)
+    router.start()
+    try:
+        t = router.submit(_prompt(cfg, 3), 4, seed=0)
+        with pytest.raises(ReplicaLost):
+            t.result(timeout=60)
+        deadline = time.monotonic() + 30
+        while (router.replicas[0].state != DEAD
+               and time.monotonic() < deadline):
+            time.sleep(0.02)
+        st = router.stats()
+        assert st["live_replicas"] == 0
+        assert st["replicas"][0]["state"] == DEAD
+        assert "InjectedFault" in st["replicas"][0]["error"]
+        with pytest.raises(NoLiveReplicas):
+            router.submit(_prompt(cfg, 3), 4, seed=1)
+        assert router.retry_after() >= 1
+    finally:
+        router.close()
+    # the exception survives close() — join on the corpse isn't silent
+    assert "InjectedFault" in router.stats()["replicas"][0]["error"]

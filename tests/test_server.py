@@ -174,10 +174,15 @@ def _get(port, path, timeout=30):
 def test_http_healthz_and_stats(http_server):
     cfg, model, params, server, router = http_server
     status, data = _get(server.port, "/healthz")
-    assert status == 200 and json.loads(data) == {"ok": True}
+    body = json.loads(data)
+    assert status == 200 and body["status"] == "ok"
+    assert body["live_replicas"] == 2 and body["queue_depth"] >= 0
     status, data = _get(server.port, "/stats")
     stats = json.loads(data)
     assert status == 200 and len(stats["replicas"]) == 2
+    assert stats["live_replicas"] == 2
+    assert all(r["state"] == "live" and r["error"] is None
+               for r in stats["replicas"])
 
 
 def test_http_generate_parity_and_sampling(http_server):
