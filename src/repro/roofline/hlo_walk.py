@@ -22,8 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import warnings
 from collections import Counter, defaultdict
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Set, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
@@ -34,12 +35,12 @@ _DTYPE_BYTES = {
     "token": 0, "opaque": 0,
 }
 
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# dims accept bounded extents (`f32[<=8,4]`, dynamic-shape HLO prints them)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[((?:<=)?[0-9,<=]*)\]")
 _COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
-_INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
-    r"([\w\-]+)\("
-)
+_INSTR_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_ARRAY_TYPE_RE = re.compile(r"[a-z0-9]+\[(?:<=)?[0-9,<=]*\](?:\{[^}]*\})?")
+_OPCODE_RE = re.compile(r"\s*([\w\-]+)\(")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 _CALL_ATTR_RE = re.compile(
     r"(calls|body|condition|to_apply|branch_computations)="
@@ -66,16 +67,47 @@ def set_pod_size(n: int) -> None:
 
 
 def _dims(dim_str: str) -> List[int]:
-    return [int(d) for d in dim_str.split(",") if d] if dim_str else []
+    # bounded dims (`<=8`) are charged at their bound — an upper estimate,
+    # consistent with the roofline's job of ranking terms
+    return ([int(d.replace("<=", "")) for d in dim_str.split(",") if d]
+            if dim_str else [])
+
+
+_warned_dtypes: Set[str] = set()
+
+
+def _dtype_bytes(dt: str) -> int:
+    """Bytes per element, warning ONCE per unknown dtype token instead of
+    silently assuming 4 (new XLA dtypes — f4/f8 variants — show up in
+    optimized HLO before anyone updates the table)."""
+    try:
+        return _DTYPE_BYTES[dt]
+    except KeyError:
+        if dt not in _warned_dtypes:
+            _warned_dtypes.add(dt)
+            warnings.warn(
+                f"hlo_walk: unknown HLO dtype {dt!r}; assuming 4 bytes/elem",
+                stacklevel=3,
+            )
+        return 4
+
+
+def iter_shapes(type_str: str) -> Iterator[Tuple[str, List[int]]]:
+    """(dtype, dims) for every array shape in an HLO type string — flat
+    arrays and arbitrarily nested tuples alike.  Shared with the analysis
+    layer (``repro.analysis``), which scans optimized HLO for forbidden
+    dtypes with the same parser the roofline uses for byte accounting."""
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        yield dt, _dims(dims)
 
 
 def _type_bytes(type_str: str) -> int:
     total = 0
-    for dt, dims in _SHAPE_RE.findall(type_str):
+    for dt, dims in iter_shapes(type_str):
         n = 1
-        for d in _dims(dims):
+        for d in dims:
             n *= d
-        total += n * _DTYPE_BYTES.get(dt, 4)
+        total += n * _dtype_bytes(dt)
     return total
 
 
@@ -92,7 +124,7 @@ def _last_shape_bytes(type_str: str) -> int:
     n = 1
     for d in _dims(dims):
         n *= d
-    return n * _DTYPE_BYTES.get(dt, 4)
+    return n * _dtype_bytes(dt)
 
 
 @dataclasses.dataclass
@@ -113,6 +145,44 @@ class Computation:
     is_fused: bool = False              # called via fusion `calls=`
 
 
+def _match_instr(line: str) -> Optional[Tuple[str, str, str, int]]:
+    """(name, type_str, opcode, operand_paren_idx) for an instruction line.
+
+    The result type is either an array type or a tuple; tuples can nest
+    (``((f32[2]{0}, s32[]), f32[4])``), so the tuple arm scans balanced
+    parens instead of trusting a one-level regex.
+    """
+    head = _INSTR_HEAD_RE.match(line)
+    if not head:
+        return None
+    pos = head.end()
+    if pos < len(line) and line[pos] == "(":
+        depth = 0
+        end = -1
+        for i in range(pos, len(line)):
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        type_str = line[pos:end + 1]
+        pos = end + 1
+    else:
+        mt = _ARRAY_TYPE_RE.match(line, pos)
+        if not mt:
+            return None
+        type_str = mt.group(0)
+        pos = mt.end()
+    mo = _OPCODE_RE.match(line, pos)
+    if not mo:
+        return None
+    return head.group(1), type_str, mo.group(1), mo.end() - 1
+
+
 def parse_hlo(text: str) -> Dict[str, Computation]:
     comps: Dict[str, Computation] = {}
     cur: Optional[Computation] = None
@@ -127,12 +197,12 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
             comps[cur.name] = cur
             cur = None
             continue
-        m = _INSTR_RE.match(line)
+        m = _match_instr(line)
         if not m:
             continue
-        name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+        name, type_str, opcode, paren_idx = m
         # operand names: inside the first (...) after opcode
-        paren = line[m.end() - 1:]
+        paren = line[paren_idx:]
         depth = 0
         end = 0
         for i, ch in enumerate(paren):
@@ -201,7 +271,7 @@ def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
                 for c in ins.calls.get("condition", []):
                     edges.append((c, float(trip + 1)))
             else:
-                for attr, lst in ins.calls.items():
+                for lst in ins.calls.values():
                     for c in lst:
                         edges.append((c, 1.0))
             for child, factor in edges:
