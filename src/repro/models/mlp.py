@@ -91,8 +91,8 @@ def _route_and_fill(xf, router, e, k, cap, dtype):
     Returns buf (e·cap, d), slot (n·k,), keep (n·k,), topk_p (n, k).
     """
     n, d = xf.shape
-    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
-                        router.astype(jnp.float32))
+    logits = common.dense_apply(xf.astype(jnp.float32),
+                                router.astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)
     topk_p, topk_e = jax.lax.top_k(probs, k)             # (n, k)
     topk_p = topk_p / jnp.maximum(topk_p.sum(-1, keepdims=True), 1e-9)
@@ -180,10 +180,9 @@ def moe_apply_a2a(x, p: MoEParams, cfg, capacity_factor: float = 1.25):
             buf.reshape(e, cap_loc, d), "model", 0, 1, tiled=True
         ).reshape(e_loc, m * cap_loc, d)
 
-        g = common.activate(
-            jnp.einsum("ecd,edf->ecf", sent, wg), cfg.act)
-        u = jnp.einsum("ecd,edf->ecf", sent, wu)
-        out = jnp.einsum("ecf,efd->ecd", g * u, wd)      # (E_loc, M·cap, D)
+        g = common.activate(common.expert_apply(sent, wg), cfg.act)
+        u = common.expert_apply(sent, wu)
+        out = common.expert_apply(g * u, wd)             # (E_loc, M·cap, D)
 
         # return: inverse all-to-all back to token-major layout.  out's
         # second axis is peer-major ([peer0 cap | peer1 cap | …]) — put the
@@ -291,8 +290,8 @@ def moe_apply(
 def router_aux_stats(x, p: MoEParams, cfg):
     """(load-balance loss, router z-loss) for the training objective."""
     n = x.shape[0] * x.shape[1]
-    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
-                        p.router.astype(jnp.float32)).reshape(n, -1)
+    logits = common.dense_apply(x.astype(jnp.float32),
+                                p.router.astype(jnp.float32)).reshape(n, -1)
     probs = jax.nn.softmax(logits, axis=-1)
     _, topk_e = jax.lax.top_k(probs, cfg.moe.num_experts_per_tok)
     e = cfg.moe.num_experts
