@@ -840,6 +840,10 @@ def unembed(x: jax.Array, embed: jax.Array, softcap: Optional[float] = None,
     real_vocab: when the table is padded (opt_pad_vocab), logits for the
     padding rows are masked to -inf so CE/argmax never select them.
     """
+    # the embedding table is documented dense-resident (tied unembed; the
+    # TT policy never compresses it), so this transposed lookup is the one
+    # weight einsum with no dispatch to route through
+    # lint: skip[AST001]
     logits = jnp.einsum(
         "...d,vd->...v", x.astype(jnp.float32), embed.astype(jnp.float32)
     )

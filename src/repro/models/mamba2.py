@@ -152,8 +152,8 @@ def ssd_chunked(
     causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
     l_mat = jnp.where(causal, jnp.exp(diff), 0.0)
     cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)           # (B,nc,Q,Q)
-    w_ij = cb[..., None] * l_mat * dtc[:, :, None, :, :]  # (B,nc,Q,Q,H)
-    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ij, xc)
+    mix_ij = cb[..., None] * l_mat * dtc[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", mix_ij, xc)
 
     # ---- chunk states: S_c = Σ_j exp(cum_Q - cum_j) dt_j b_j x_jᵀ ----
     decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,Q,H)
@@ -270,6 +270,8 @@ def decode_step(params: MambaParams, cache: MambaCache, tokens, cfg):
         z, xi, b, c, dt = _split_proj(xz, cfg)
         conv_in = jnp.concatenate([xi, b, c], axis=-1)    # (B, 1, C)
         hist = jnp.concatenate([c_state, conv_in], axis=1)  # (B, W, C)
+        # lint: skip[AST001] depthwise conv (elementwise over channels),
+        # not a weight matmul — dense_apply can't express the "wc,wc" tap
         conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
                           lp.conv_w.astype(jnp.float32)) + lp.conv_b
         conv = jax.nn.silu(conv)                          # (B, C)

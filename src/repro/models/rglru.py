@@ -281,6 +281,8 @@ def _rglru_step(x, lp: RGLRULayerParams, cfg, h_state, conv_state):
     hist = jnp.concatenate(
         [conv_state, main[:, None, :].astype(conv_state.dtype)], axis=1
     )                                                      # (B, W, R)
+    # lint: skip[AST001] depthwise conv (elementwise over channels), not a
+    # weight matmul — dense_apply can't express the "wr,wr" tap
     conv = jnp.einsum(
         "bwr,wr->br", hist.astype(jnp.float32), lp.conv_w.astype(jnp.float32)
     ) + lp.conv_b.astype(jnp.float32)

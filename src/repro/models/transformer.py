@@ -16,7 +16,6 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import attention as attn
 from repro.models import common
@@ -65,8 +64,10 @@ def _layer_flags(cfg) -> jax.Array:
     counting from the Nth; all-global when no window is configured)."""
     if cfg.window is None or cfg.global_every is None:
         return jnp.ones((cfg.num_layers,), bool)
-    idx = np.arange(cfg.num_layers)
-    return jnp.asarray((idx + 1) % cfg.global_every == 0)
+    # iota, not jnp.asarray(np.arange(...)): converting a concrete numpy
+    # array under trace binds a device_put primitive per step (PRG002)
+    idx = jnp.arange(cfg.num_layers)
+    return (idx + 1) % cfg.global_every == 0
 
 
 def _block(x, lp: LayerParams, is_global, cfg, positions, impl):
