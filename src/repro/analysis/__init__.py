@@ -1,0 +1,10 @@
+"""Two-layer invariant linter (see docs/ANALYSIS.md).
+
+``python -m repro.analysis.check --strict`` is the CI gate: AST convention
+rules (AST001–AST005) over ``src/`` plus traced program rules
+(PRG001–PRG004) over the registered hot entry points.
+"""
+
+from repro.analysis.base import Finding, Rule, all_rules
+
+__all__ = ["Finding", "Rule", "all_rules"]

@@ -1,0 +1,411 @@
+"""Layer 2: AST convention lint over ``src/``.
+
+Every rule here encodes a convention that keeps the TT/quant dispatch and
+the serving runtime honest — things an ordinary test suite can't see
+because bypassing them still computes the right numbers, just without the
+compression/perf win (or with a latent race).  Rules:
+
+  AST001  weight matmuls in ``models/`` route through dense_apply/expert_apply
+  AST002  no wall-clock / global numpy RNG in device-code modules
+  AST003  Router mailbox mutation only under the router lock
+  AST004  every kernels/<name>/ package ships kernel.py + ref.py + ops.py
+          and a parity test under tests/
+  AST005  skip markers must name known rule IDs
+
+Suppression: ``# lint: skip[AST001]`` on the flagged line or on a
+comment line directly above it (see ``base.skip_markers``).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence, Set
+
+from repro.analysis.base import (
+    Finding, Rule, register, skip_markers, suppressed,
+)
+
+AST001 = register(Rule(
+    "AST001", "ast", "weight matmul bypasses dispatch",
+    "weight-shaped einsum/@/dot in models/ must go through "
+    "dense_apply/expert_apply — the raw-vs-TT-vs-int8 dispatch point",
+    guarded_since="PR 2 (TT dispatch), PR 7 (int8 cores)",
+))
+AST002 = register(Rule(
+    "AST002", "ast", "host nondeterminism in device code",
+    "models/kernels/core modules must not call time.time()-style clocks or "
+    "the global numpy RNG (seeded RandomState/default_rng constructors are "
+    "fine) — traced code must be replayable",
+    guarded_since="PR 4 (fused decode driver)",
+))
+AST003 = register(Rule(
+    "AST003", "ast", "mailbox mutation outside router lock",
+    "replica mailbox operations (.commands submit-put / get_nowait drain / "
+    "reassignment) must sit lexically under `with <...lock>` — the failover "
+    "path re-queues in-flight commands and must never race a submit",
+    guarded_since="PR 8 (fault-tolerant serving)",
+))
+AST004 = register(Rule(
+    "AST004", "ast", "kernel package missing ref oracle or parity test",
+    "every kernels/<name>/ package ships kernel.py + ref.py + ops.py and is "
+    "named by a parity test under tests/ — fused paths never exist without "
+    "an oracle",
+    guarded_since="PR 2 (kernel package layout)",
+))
+AST005 = register(Rule(
+    "AST005", "ast", "skip marker names unknown rule",
+    "`# lint: skip[...]` markers must name registered rule IDs — stale or "
+    "misspelled suppressions are findings, not silence",
+    guarded_since="PR 9 (this linter)",
+))
+
+# --------------------------------------------------------------------------
+# AST001 — weight matmuls must route through dense_apply / expert_apply
+# --------------------------------------------------------------------------
+
+# Identifier roots that look like weights/parameter banks.  Tuned against
+# the current models/ tree: params fields (w_gate, wg, wu, wd, router,
+# conv_w, embed, cores, lead) match; activations (x, h, logits, sent, hist,
+# qg, mix_ij, ...) don't.
+_WEIGHT_NAME = re.compile(
+    r"^(w|w[a-z0-9]|w_[a-z0-9_]+|\w*weights?\w*|router\w*|embed\w*|"
+    r"kernel|conv_w|cores?|lead\w*|tables?)$"
+)
+
+# einsum/matmul/dot spellings on the numpy/lax namespaces, plus the `@`
+# operator (handled separately as BinOp MatMult).
+_MATMUL_FNS = {"einsum", "matmul", "tensordot", "dot", "vdot", "dot_general"}
+_MATMUL_NAMESPACES = {"jnp", "np", "numpy", "lax", "jax"}
+
+# Calls defined inside these functions ARE the dispatch point.
+_DISPATCH_FNS = {"dense_apply", "expert_apply"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jnp.einsum' / 'jax.lax.dot_general' for an Attribute/Name chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_matmul_call(call: ast.Call) -> bool:
+    name = _dotted(call.func)
+    if name is None:
+        return False
+    parts = name.split(".")
+    return (parts[-1] in _MATMUL_FNS and parts[0] in _MATMUL_NAMESPACES
+            and len(parts) >= 2)
+
+
+def _operand_roots(node: ast.AST) -> Iterator[str]:
+    """Identifier roots of an operand expression, unwrapping method calls
+    (``w.astype(f32)``), subscripts (``bank[i]``), and binary ops."""
+    if isinstance(node, ast.Attribute):
+        yield node.attr
+    elif isinstance(node, ast.Name):
+        yield node.id
+    elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        yield from _operand_roots(node.func.value)
+    elif isinstance(node, ast.Subscript):
+        yield from _operand_roots(node.value)
+    elif isinstance(node, ast.BinOp):
+        yield from _operand_roots(node.left)
+        yield from _operand_roots(node.right)
+    elif isinstance(node, ast.UnaryOp):
+        yield from _operand_roots(node.operand)
+
+
+def _weight_roots(operands: Sequence[ast.AST]) -> List[str]:
+    return [r for op in operands for r in _operand_roots(op)
+            if _WEIGHT_NAME.match(r)]
+
+
+class _Ast001Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, skips):
+        self.path, self.skips = path, skips
+        self.fn_stack: List[str] = []
+        self.findings: List[Finding] = []
+
+    def _in_dispatch(self) -> bool:
+        return any(fn in _DISPATCH_FNS for fn in self.fn_stack)
+
+    def visit_FunctionDef(self, node):
+        self.fn_stack.append(node.name)
+        self.generic_visit(node)
+        self.fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _flag(self, node: ast.AST, roots: List[str]):
+        if self._in_dispatch():
+            return
+        if suppressed(self.skips, "AST001", node.lineno,
+                      getattr(node, "end_lineno", None)):
+            return
+        self.findings.append(Finding(
+            "AST001", self.path, node.lineno,
+            f"weight-shaped matmul on {sorted(set(roots))} bypasses "
+            f"dense_apply/expert_apply (the raw/TT/int8 dispatch point); "
+            f"route through models.common or justify with "
+            f"`# lint: skip[AST001]`",
+        ))
+
+    def visit_Call(self, node: ast.Call):
+        if _is_matmul_call(node):
+            name = _dotted(node.func) or ""
+            # einsum's first positional arg is the spec string
+            operands = node.args[1:] if name.endswith("einsum") else node.args
+            roots = _weight_roots(operands)
+            if roots:
+                self._flag(node, roots)
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node: ast.BinOp):
+        if isinstance(node.op, ast.MatMult):
+            roots = _weight_roots([node.left, node.right])
+            if roots:
+                self._flag(node, roots)
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# AST002 — no wall clock / global RNG in device-code modules
+# --------------------------------------------------------------------------
+
+_CLOCK_FNS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+              "monotonic", "monotonic_ns", "process_time"}
+# np.random attributes that are NOT global-state draws (seeded constructors
+# and types) — everything else on np.random is the module-global stream.
+_NP_RANDOM_OK = {"RandomState", "default_rng", "Generator", "SeedSequence",
+                 "PCG64", "Philox", "BitGenerator", "MT19937"}
+
+
+class _Ast002Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, skips):
+        self.path, self.skips = path, skips
+        self.findings: List[Finding] = []
+        self.time_aliases: Set[str] = set()   # from time import time, ...
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        if node.module == "time":
+            for alias in node.names:
+                if alias.name in _CLOCK_FNS:
+                    self.time_aliases.add(alias.asname or alias.name)
+        self.generic_visit(node)
+
+    def _flag(self, node, what: str):
+        if suppressed(self.skips, "AST002", node.lineno,
+                      getattr(node, "end_lineno", None)):
+            return
+        self.findings.append(Finding(
+            "AST002", self.path, node.lineno,
+            f"{what} in a device-code module — traced/benchmarked code must "
+            f"be deterministic and replayable; take timestamps in launch/ "
+            f"or thread a seeded generator through",
+        ))
+
+    def visit_Call(self, node: ast.Call):
+        func = node.func
+        name = _dotted(func)
+        if name is not None:
+            parts = name.split(".")
+            if (len(parts) == 2 and parts[0] == "time"
+                    and parts[1] in _CLOCK_FNS):
+                self._flag(node, f"wall-clock call {name}()")
+            elif (len(parts) >= 3 and parts[-3] in ("np", "numpy")
+                    and parts[-2] == "random"
+                    and parts[-1] not in _NP_RANDOM_OK):
+                self._flag(node, f"global numpy RNG call {name}()")
+            elif len(parts) == 1 and parts[0] in self.time_aliases:
+                self._flag(node, f"wall-clock call {name}()")
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# AST003 — Router mailbox mutation only under the router lock
+# --------------------------------------------------------------------------
+#
+# The mailbox contract (launch/router.py): submit-side puts, drain-side
+# get_nowait() sweeps, and mailbox replacement happen under self._lock so
+# failover can atomically re-queue in-flight commands.  Exempt by design:
+#   * nudge puts — `put(None)` or `put(("nudge", ...))` — which only wake a
+#     worker; a lost or duplicated nudge is harmless,
+#   * the worker's blocking `.get(timeout=...)` (single consumer),
+#   * construction inside __init__ (no concurrent reader yet).
+
+
+def _mentions_lock(node: ast.AST) -> bool:
+    return any(
+        "lock" in part.lower()
+        for n in ast.walk(node)
+        for part in ([n.attr] if isinstance(n, ast.Attribute)
+                     else [n.id] if isinstance(n, ast.Name) else [])
+    )
+
+
+class _Ast003Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, skips):
+        self.path, self.skips = path, skips
+        self.findings: List[Finding] = []
+        self.lock_depth = 0
+        self.fn_stack: List[str] = []
+
+    def visit_With(self, node: ast.With):
+        locked = any(_mentions_lock(item.context_expr)
+                     for item in node.items)
+        self.lock_depth += locked
+        self.generic_visit(node)
+        self.lock_depth -= locked
+
+    def visit_FunctionDef(self, node):
+        self.fn_stack.append(node.name)
+        self.generic_visit(node)
+        self.fn_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _flag(self, node, what: str):
+        if suppressed(self.skips, "AST003", node.lineno,
+                      getattr(node, "end_lineno", None)):
+            return
+        self.findings.append(Finding(
+            "AST003", self.path, node.lineno,
+            f"{what} outside `with <lock>` — mailbox mutation must be "
+            f"atomic with failover's re-queue sweep",
+        ))
+
+    def visit_Call(self, node: ast.Call):
+        func = node.func
+        if (isinstance(func, ast.Attribute)
+                and isinstance(func.value, ast.Attribute)
+                and func.value.attr == "commands"
+                and self.lock_depth == 0):
+            if func.attr == "put":
+                args = node.args
+                nudge = len(args) == 1 and (
+                    (isinstance(args[0], ast.Constant)
+                     and args[0].value is None)
+                    or (isinstance(args[0], ast.Tuple) and args[0].elts
+                        and isinstance(args[0].elts[0], ast.Constant)
+                        and args[0].elts[0].value == "nudge"))
+                if not nudge:
+                    self._flag(node, "mailbox .commands.put(<command>)")
+            elif func.attr == "get_nowait":
+                self._flag(node, "mailbox .commands.get_nowait() drain")
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign):
+        if self.lock_depth == 0 and "__init__" not in self.fn_stack:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Attribute) and tgt.attr == "commands":
+                    self._flag(node, "mailbox replacement (.commands = ...)")
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# AST004 — kernel package completeness
+# --------------------------------------------------------------------------
+
+_KERNEL_REQUIRED = ("kernel.py", "ref.py", "ops.py")
+
+
+def _check_kernel_packages(root: Path) -> List[Finding]:
+    findings: List[Finding] = []
+    kdir = root / "src" / "repro" / "kernels"
+    if not kdir.is_dir():
+        return findings
+    test_text = "".join(
+        p.read_text(encoding="utf-8") for p in sorted((root / "tests").glob("*.py"))
+    ) if (root / "tests").is_dir() else ""
+    for pkg in sorted(p for p in kdir.iterdir() if p.is_dir()):
+        if pkg.name.startswith(("_", ".")):
+            continue
+        rel = pkg.relative_to(root).as_posix()
+        for req in _KERNEL_REQUIRED:
+            if not (pkg / req).is_file():
+                findings.append(Finding(
+                    "AST004", rel, 0,
+                    f"kernel package is missing {req} — fused kernels ship "
+                    f"with a reference oracle and a dispatch wrapper",
+                ))
+        if (f"kernels.{pkg.name}" not in test_text
+                and f"kernels/{pkg.name}" not in test_text):
+            findings.append(Finding(
+                "AST004", rel, 0,
+                f"no test under tests/ references kernels.{pkg.name} — "
+                f"every fused path needs a kernel-vs-ref parity test",
+            ))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# AST005 — skip-marker hygiene
+# --------------------------------------------------------------------------
+
+
+def _check_markers(path: str, skips: Dict[int, Set[str]],
+                   known: Set[str]) -> List[Finding]:
+    findings = []
+    for lineno in sorted(skips):
+        for rid in sorted(skips[lineno] - known):
+            findings.append(Finding(
+                "AST005", path, lineno,
+                f"skip marker names unknown rule {rid!r} — registered rules: "
+                f"{sorted(known)}",
+            ))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# runner
+# --------------------------------------------------------------------------
+
+_SCOPE_AST001 = ("src/repro/models/",)
+_SCOPE_AST002 = ("src/repro/models/", "src/repro/kernels/", "src/repro/core/")
+
+
+def run(root, rules: Optional[Set[str]] = None) -> List[Finding]:
+    """Run the AST rules over ``root`` (a repo checkout with ``src/repro``).
+
+    ``rules`` restricts to a subset of rule IDs (default: all AST rules).
+    """
+    root = Path(root)
+    want = rules or {"AST001", "AST002", "AST003", "AST004", "AST005"}
+    known = {"AST001", "AST002", "AST003", "AST004", "AST005",
+             "PRG001", "PRG002", "PRG003", "PRG004"}
+    findings: List[Finding] = []
+    src = root / "src" / "repro"
+    for py in sorted(src.rglob("*.py")):
+        rel = py.relative_to(root).as_posix()
+        source = py.read_text(encoding="utf-8")
+        try:
+            tree = ast.parse(source, filename=rel)
+        except SyntaxError as e:
+            findings.append(Finding(
+                "AST005", rel, e.lineno or 0, f"unparseable module: {e.msg}"))
+            continue
+        skips = skip_markers(source)
+        if "AST001" in want and rel.startswith(_SCOPE_AST001):
+            v = _Ast001Visitor(rel, skips)
+            v.visit(tree)
+            findings.extend(v.findings)
+        if "AST002" in want and rel.startswith(_SCOPE_AST002):
+            v = _Ast002Visitor(rel, skips)
+            v.visit(tree)
+            findings.extend(v.findings)
+        if "AST003" in want:
+            v = _Ast003Visitor(rel, skips)
+            v.visit(tree)
+            findings.extend(v.findings)
+        if "AST005" in want:
+            findings.extend(_check_markers(rel, skips, known))
+    if "AST004" in want:
+        findings.extend(_check_kernel_packages(root))
+    return findings

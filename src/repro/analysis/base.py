@@ -1,0 +1,101 @@
+"""Rule registry, findings, and suppression markers for the invariant linter.
+
+The analyzer has two layers (see ``docs/ANALYSIS.md``):
+
+  * program lint (``programlint``) — traces registered hot entry points to
+    jaxprs / lowered / compiled HLO and asserts dataflow contracts (dtype
+    discipline, no host callbacks, donation honored, VMEM tile plans);
+  * convention lint (``astlint``) — AST rules over ``src/`` enforcing the
+    repo's dispatch and threading conventions.
+
+Both layers report :class:`Finding`s against :class:`Rule`s registered
+here.  Source-level rules honor a narrow escape hatch::
+
+    y = jnp.einsum(...)  # lint: skip[AST001] depthwise conv, not a matmul
+
+A marker suppresses the named rule(s) on its own line; a marker on a
+comment-only line also covers the statement that starts on the next line.
+Unknown rule IDs in markers are themselves findings (AST005) so stale
+suppressions can't linger silently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Set
+
+_SKIP_RE = re.compile(r"#\s*lint:\s*skip\[([A-Za-z0-9_,\s]+)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One checkable invariant: stable ID, layer, and the contract it guards."""
+
+    rule_id: str
+    layer: str                  # "program" | "ast"
+    title: str
+    invariant: str              # one-line statement of the guarded contract
+    guarded_since: str          # PR that introduced the invariant
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation: rule, location, and a human-actionable message."""
+
+    rule_id: str
+    path: str                   # repo-relative file, or "entry:<name>"
+    line: int                   # 1-based; 0 for whole-entry findings
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule_id}: {self.message}"
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    if rule.rule_id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {rule.rule_id}")
+    _REGISTRY[rule.rule_id] = rule
+    return rule
+
+
+def all_rules() -> Dict[str, Rule]:
+    # Import for registration side effects; deferred to dodge the cycle
+    # (astlint/programlint import base for `register`).
+    from repro.analysis import astlint, programlint  # noqa: F401
+    return dict(_REGISTRY)
+
+
+def skip_markers(source: str) -> Dict[int, Set[str]]:
+    """Map 1-based line number -> rule IDs suppressed on that line.
+
+    A marker on a comment-only line also covers the next line, so a long
+    statement can carry its justification above rather than trailing.
+    """
+    skips: Dict[int, Set[str]] = {}
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        m = _SKIP_RE.search(text)
+        if not m:
+            continue
+        ids = {part.strip() for part in m.group(1).split(",") if part.strip()}
+        skips.setdefault(lineno, set()).update(ids)
+        if text.lstrip().startswith("#"):
+            skips.setdefault(lineno + 1, set()).update(ids)
+    return skips
+
+
+def suppressed(skips: Dict[int, Set[str]], rule_id: str,
+               lineno: int, end_lineno: int | None = None) -> bool:
+    """True when any line of the node's span (or the line above it) names
+    ``rule_id`` in a skip marker."""
+    for ln in range(lineno - 1, (end_lineno or lineno) + 1):
+        if rule_id in skips.get(ln, ()):
+            return True
+    return False
+
+
+def iter_findings_sorted(findings: Iterable[Finding]) -> List[Finding]:
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule_id))

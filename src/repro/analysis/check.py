@@ -1,0 +1,105 @@
+"""CLI for the invariant linter: ``python -m repro.analysis.check``.
+
+Runs both layers (AST convention lint + traced program lint) and reports
+findings.  Exit status: 0 when clean, 1 when findings (or analyzer errors)
+exist and ``--strict`` is set.  The CI ``analysis`` lane runs
+``--strict``; locally, ``--fast`` trims the program sweep to one arch plus
+the TT/int8 and admission entries.
+
+    python -m repro.analysis.check --strict            # the CI gate
+    python -m repro.analysis.check --fast --layer ast  # quick local loop
+    python -m repro.analysis.check --list-rules        # rule catalog
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional, Sequence
+
+from repro.analysis import astlint, programlint
+from repro.analysis.base import Finding, all_rules, iter_findings_sorted
+
+
+def _list_rules() -> str:
+    rules = all_rules()
+    lines = []
+    for rid in sorted(rules):
+        r = rules[rid]
+        lines.append(f"{rid}  [{r.layer}]  {r.title}")
+        lines.append(f"        {r.invariant}")
+        lines.append(f"        guarded since: {r.guarded_since}")
+    return "\n".join(lines)
+
+
+def run_checks(layer: str = "all", fast: bool = False,
+               rules: Optional[Sequence[str]] = None,
+               entries: Optional[Sequence[str]] = None,
+               root: str = ".") -> List[Finding]:
+    rule_set = set(rules) if rules else None
+    findings: List[Finding] = []
+    if layer in ("all", "ast"):
+        ast_rules = ({r for r in rule_set if r.startswith("AST")}
+                     if rule_set else None)
+        if ast_rules or rule_set is None:
+            findings.extend(astlint.run(root, rules=ast_rules))
+    if layer in ("all", "program"):
+        prg_rules = ({r for r in rule_set if not r.startswith("AST")}
+                     if rule_set else None)
+        if prg_rules or rule_set is None:
+            findings.extend(programlint.run(fast=fast, rules=prg_rules,
+                                            entries=entries))
+    return iter_findings_sorted(findings)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="invariant linter: jaxpr/HLO contract checks + "
+                    "repo-convention AST lint",
+    )
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any finding (the CI gate)")
+    ap.add_argument("--fast", action="store_true",
+                    help="trim the program sweep to the fast arch + "
+                         "TT/admission entries")
+    ap.add_argument("--layer", choices=("all", "ast", "program"),
+                    default="all")
+    ap.add_argument("--rules", nargs="*", metavar="ID",
+                    help="restrict to these rule IDs (e.g. AST001 PRG003)")
+    ap.add_argument("--entries", nargs="*", metavar="SUBSTR",
+                    help="restrict program entries by substring match")
+    ap.add_argument("--root", default=".",
+                    help="repo root for the AST layer (default: cwd)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    findings = run_checks(layer=args.layer, fast=args.fast,
+                          rules=args.rules, entries=args.entries,
+                          root=args.root)
+    if args.as_json:
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        n_err = sum(f.rule_id == "ERROR" for f in findings)
+        n = len(findings) - n_err
+        status = "clean" if not findings else (
+            f"{n} finding(s)" + (f", {n_err} analyzer error(s)" if n_err
+                                 else ""))
+        print(f"repro.analysis: {status} "
+              f"(layer={args.layer}{', fast' if args.fast else ''})")
+    if findings and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
