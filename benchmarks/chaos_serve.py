@@ -199,7 +199,8 @@ def _checkpoint_leg() -> dict:
         # truncation: chop the archive mid-file
         mgr.save(4, state)
         shard4 = os.path.join(cdir, "step_000004", "shard_0.npz")
-        raw = open(shard4, "rb").read()
+        with open(shard4, "rb") as f:
+            raw = f.read()
         with open(shard4, "wb") as f:
             f.write(raw[: len(raw) // 2])
         try:

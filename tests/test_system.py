@@ -70,7 +70,7 @@ def test_fedttd_sync_converges_to_average(rng):
     p1 = {"w": jnp.asarray(base.copy())}
     state = fedttd.init_state([p0, p1])
     # drift the pods apart, sync, repeat — params must track the mean
-    for it in range(3):
+    for _ in range(3):
         d0 = 0.05 * rng.standard_normal((64, 48)).astype(np.float32)
         d1 = 0.05 * rng.standard_normal((64, 48)).astype(np.float32)
         p0 = {"w": p0["w"] + d0}
